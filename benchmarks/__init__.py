@@ -1,0 +1,2 @@
+# Benchmark harness: one module per paper table/figure + roofline reporter.
+# Run everything: PYTHONPATH=src python -m benchmarks.run

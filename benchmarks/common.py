@@ -1,0 +1,100 @@
+"""Shared benchmark helpers: small-but-real models, timing, quality proxy.
+
+No pretrained weights offline (DESIGN §6): quality is measured as agreement
+with the vanilla engine's generation on the same random-init model —
+the training-free methods' *target* is to reproduce vanilla output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs import GenerationConfig, SkipStage
+from repro.core import make_engine
+from repro.models import build_model
+
+FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "1")))
+
+
+@dataclasses.dataclass
+class BenchModel:
+    name: str
+    model: object
+    params: dict
+    prompt: jax.Array
+    gen_kw: dict
+
+
+def build_bench_model(arch: str = "llada-8b", *, n_layers: int | None = None,
+                      batch: int | None = None, prompt_len: int | None = None,
+                      seed: int = 0) -> BenchModel:
+    """FAST: tiny smoke sizes (runtime overhead-bound — relative TPS numbers
+    are NOT meaningful, only correctness).  FULL (REPRO_BENCH_FAST=0): the
+    compute-dominated regime where vanilla re-processes prompt+gen every
+    iteration and the caching/skipping speedups reproduce qualitatively."""
+    cfg = configs.reduced(configs.get_config(arch))
+    if n_layers is None:
+        n_layers = 4 if FAST else 8
+    if cfg.pattern_period == 1:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    if not FAST and cfg.family == "dense":
+        # wide enough that per-iteration FLOPs dominate dispatch overhead —
+        # the regime where ES-dLLM's savings are visible in wall clock
+        kv = max(1, 8 // cfg.q_heads_per_kv)
+        cfg = dataclasses.replace(cfg, d_model=512, n_heads=8, n_kv_heads=kv,
+                                  head_dim=64, d_ff=1536)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    if batch is None:
+        batch = 4 if FAST else 2
+    if prompt_len is None:
+        prompt_len = 24 if FAST else 192
+    prompt = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                (batch, prompt_len), 3, cfg.vocab_size)
+    gen_kw = dict(gen_length=16 if FAST else 32, block_length=8 if FAST else 16)
+    return BenchModel(arch, model, params, prompt, gen_kw)
+
+
+def default_stages(model) -> tuple:
+    g = model.n_groups
+    return (SkipStage(max(g // 4, 1) * model.period, 0.5),
+            SkipStage(max(g // 2, 2) * model.period, 0.5))
+
+
+def run_engine(bm: BenchModel, gcfg: GenerationConfig, *, repeats: int = 1):
+    """Returns (tokens ndarray, tokens_per_second, seconds_per_call)."""
+    eng = make_engine(bm.model, gcfg)
+    key = jax.random.PRNGKey(123)
+    # warmup (compile)
+    toks = jax.block_until_ready(eng.generate(bm.params, bm.prompt, key))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        toks = jax.block_until_ready(eng.generate(bm.params, bm.prompt, key))
+    dt = (time.perf_counter() - t0) / repeats
+    n_tok = bm.prompt.shape[0] * gcfg.gen_length
+    return np.asarray(toks), n_tok / dt, dt
+
+
+def agreement(a: np.ndarray, b: np.ndarray, prompt_len: int) -> float:
+    return float((a[:, prompt_len:] == b[:, prompt_len:]).mean())
+
+
+def gen_cfg(bm: BenchModel, mode: str, *, stages=None, **kw) -> GenerationConfig:
+    base = dict(bm.gen_kw)
+    if mode == "es":
+        # paper defaults: prompt refresh once per block, block refresh each 4
+        base.update(skip_stages=stages if stages is not None else default_stages(bm.model),
+                    prompt_refresh_period=kw.pop("prompt_refresh_period",
+                                                 base["block_length"]),
+                    block_refresh_period=kw.pop("block_refresh_period", 4))
+    elif mode == "dualcache":
+        base.update(prompt_refresh_period=kw.pop("prompt_refresh_period", 0),
+                    block_refresh_period=kw.pop("block_refresh_period", 1))
+    base.update(kw)
+    return GenerationConfig(mode=mode if mode != "es_star" else "es", **base)

@@ -1,0 +1,52 @@
+"""Figure 1 reproduction: confidence variation across successive iterations.
+
+The paper's observation (§4.1): confidence changes follow a near-exponential
+distribution concentrated near zero; after the first iterations <10% of
+positions change by > 0.05.  We replay the vanilla denoising loop and record
+per-position confidence each iteration.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import GenerationConfig
+from repro.core.engine import DiffusionEngine
+
+from benchmarks.common import build_bench_model, gen_cfg
+
+
+def confidence_history(bm, gcfg) -> np.ndarray:
+    """[iters, B, block] confidence trace of the first block (vanilla loop)."""
+    eng = DiffusionEngine(bm.model, gcfg)
+    model, gen = bm.model, gcfg
+    b, p = bm.prompt.shape
+    tokens = jnp.concatenate(
+        [bm.prompt, jnp.full((b, gen.gen_length), eng.mask_id, jnp.int32)], 1)
+    bs = jnp.asarray(p, jnp.int32)
+    st = eng.make_block_state(tokens, jax.random.PRNGKey(0))
+    step = jax.jit(lambda s: (eng._vanilla_compute(bm.params, s, bs, None),))
+    hist = []
+    for _ in range(gen.block_length):
+        (conf, pred, _), = step(st)
+        hist.append(np.asarray(conf))
+        st = eng._apply_unmask(st, bs, st.caches, conf, pred, st.hidden, st.kv_valid)
+    return np.stack(hist)
+
+
+def run(rows: list) -> None:
+    bm = build_bench_model("llada-8b")
+    gcfg = gen_cfg(bm, "vanilla")
+    t0 = time.perf_counter()
+    hist = confidence_history(bm, gcfg)
+    dt = time.perf_counter() - t0
+    dconf = np.abs(np.diff(hist, axis=0))               # [iters-1, B, block]
+    frac_gt_005_late = float((dconf[2:] > 0.05).mean()) if dconf.shape[0] > 2 else float("nan")
+    rows.append((
+        "fig1/confidence_variation", dt * 1e6,
+        f"median_dconf={np.median(dconf):.4f} p90={np.quantile(dconf, .9):.4f} "
+        f"frac>|0.05|(late)={frac_gt_005_late:.3f}",
+    ))

@@ -1,0 +1,116 @@
+"""Roofline reporter (deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = FLOPs / (chips * 197e12)
+    memory term     = HBM bytes / (chips * 819e9)
+    collective term = collective bytes / (chips * 50e9)
+
+Primary terms come from the analytic cost model (costmodel.py — see its
+docstring for why XLA cost_analysis under-counts loops); the dry-run
+artifacts supply the memory proof and a structural cross-check.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--json out]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.steps import (
+    FULL_ATTN_ARCHS,
+    LONG_CTX_WINDOW,
+    dryrun_model_config,
+    serving_gen_config,
+)
+
+from benchmarks import costmodel
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+MESH_AXES = {"single": {"data": 16, "model": 16},
+             "multi": {"pod": 2, "data": 16, "model": 16}}
+
+
+def analytic_cost(arch: str, shape_name: str, mesh_name: str) -> costmodel.StepCost:
+    cfg = dryrun_model_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    axes = MESH_AXES[mesh_name]
+    if shape.kind == "train":
+        return costmodel.train_step_cost(cfg, shape, axes)
+    gen = serving_gen_config(cfg)
+    if shape.kind == "prefill":
+        return costmodel.prefill_cost(cfg, shape, gen, axes)
+    wo = LONG_CTX_WINDOW if (shape.name == "long_500k" and arch in FULL_ATTN_ARCHS) else 0
+    return costmodel.decode_step_cost(cfg, shape, gen, axes, window_override=wo)
+
+
+def load_artifact(arch: str, shape: str, mesh: str) -> dict | None:
+    path = os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "single") -> dict:
+    cost = analytic_cost(arch, shape, mesh)
+    chips = 512 if mesh == "multi" else 256
+    t_comp = cost.flops / (chips * PEAK_FLOPS_BF16)
+    t_mem = cost.hbm_bytes / (chips * HBM_BW)
+    t_coll = cost.coll_bytes / (chips * ICI_BW)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    art = load_artifact(arch, shape, mesh)
+    row = {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": cost.model_flops,
+        "useful_ratio": cost.model_flops / cost.flops if cost.flops else 0.0,
+        "roofline_frac": t_comp / bound if bound else 0.0,
+    }
+    if art:
+        mem = art["memory"]
+        row["hbm_per_dev_gib"] = (mem["argument_size"] + mem["temp_size"]
+                                  + mem["output_size"]) / 2**30
+        row["hlo_coll_bytes_lb"] = art["collectives"]["total_bytes"]
+        row["compiled"] = True
+    else:
+        row["compiled"] = False
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+
+    rows = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect.':>10s} {'dominant':>10s} {'useful':>7s} {'HBM/dev':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            r = roofline_row(arch, shape, args.mesh)
+            rows.append(r)
+            hbm = f"{r.get('hbm_per_dev_gib', float('nan')):7.2f}G" if r["compiled"] else "   n/a"
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{r['compute_s']*1e3:9.3f}ms {r['memory_s']*1e3:9.3f}ms "
+                  f"{r['collective_s']*1e3:9.3f}ms {r['dominant']:>10s} "
+                  f"{r['useful_ratio']:6.2f} {hbm}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark driver (deliverable d): one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_FAST=0 for the larger
+configuration; default is the fast CPU-friendly setting.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig1_confidence,
+    fig2_hidden_variation,
+    table1_tps,
+    table9_skip_ablation,
+    table10_skip_times,
+    table11_parallel_decoding,
+    table13_sparse_attention,
+    table15_combined,
+)
+
+MODULES = [
+    ("table1", table1_tps),
+    ("table9", table9_skip_ablation),
+    ("table10", table10_skip_times),
+    ("table11", table11_parallel_decoding),
+    ("table13", table13_sparse_attention),
+    ("table15", table15_combined),
+    ("fig1", fig1_confidence),
+    ("fig2", fig2_hidden_variation),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rows: list = []
+    failures = []
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        before = len(rows)
+        try:
+            mod.run(rows)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            continue
+        for r in rows[before:]:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

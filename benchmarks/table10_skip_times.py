@@ -1,0 +1,31 @@
+"""Table 10: number of skip stages at ~constant FLOPs proportion."""
+from __future__ import annotations
+
+from repro.configs import SkipStage
+from repro.core.schedule import flops_proportion
+
+from benchmarks.common import agreement, build_bench_model, gen_cfg, run_engine
+
+
+def run(rows: list) -> None:
+    bm = build_bench_model("llada-8b", n_layers=8)
+    model = bm.model
+    p = bm.prompt.shape[1]
+    lb = bm.gen_kw["block_length"]
+    van_toks, _, _ = run_engine(bm, gen_cfg(bm, "vanilla"))
+
+    # one / two / three stages tuned to a similar total FLOPs proportion
+    cases = [
+        ("1stage_r0.7", (SkipStage(2, 0.7),)),
+        ("2stage_r0.5", (SkipStage(2, 0.5), SkipStage(4, 0.5))),
+        ("3stage_r0.4", (SkipStage(2, 0.405), SkipStage(4, 0.405), SkipStage(6, 0.405))),
+    ]
+    for name, stages in cases:
+        gc = gen_cfg(bm, "es", stages=stages)
+        fp = flops_proportion(model.cfg, gc, lb)
+        toks, tps, dt = run_engine(bm, gc)
+        rows.append((
+            f"table10/{name}", dt * 1e6,
+            f"flops={fp*100:.0f}% tps={tps:.2f} "
+            f"agree={agreement(toks, van_toks, p):.3f}",
+        ))

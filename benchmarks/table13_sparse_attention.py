@@ -1,0 +1,29 @@
+"""Tables 13/14: integration with Sparse-dLLM-style cache eviction
+(retention 0.5, kernel 3).  Sparse-only mode uses a zero-ratio skip stage
+purely as the indicator probe (no tokens skipped)."""
+from __future__ import annotations
+
+from repro.configs import SkipStage
+
+from benchmarks.common import agreement, build_bench_model, gen_cfg, run_engine
+
+
+def run(rows: list) -> None:
+    bm = build_bench_model("llada-8b")
+    p = bm.prompt.shape[1]
+    van_toks, _, _ = run_engine(bm, gen_cfg(bm, "vanilla"))
+    _, dc_tps, _ = run_engine(bm, gen_cfg(bm, "dualcache"))
+
+    probe = (SkipStage(max(bm.model.n_groups // 4, 1) * bm.model.period, 0.0),)
+    for name, gc in [
+        ("sparse_only", gen_cfg(bm, "es", stages=probe, sparse_attention=True,
+                                sparse_retention=0.5)),
+        ("es+sparse", gen_cfg(bm, "es", sparse_attention=True,
+                              sparse_retention=0.5)),
+    ]:
+        toks, tps, dt = run_engine(bm, gc)
+        rows.append((
+            f"table13/{name}", dt * 1e6,
+            f"tps={tps:.2f} speedup_vs_dc={tps/dc_tps:.2f} "
+            f"agree={agreement(toks, van_toks, p):.3f}",
+        ))

@@ -1,0 +1,20 @@
+"""Table 15: ES + parallel decoding + sparse attention combined."""
+from __future__ import annotations
+
+from benchmarks.common import agreement, build_bench_model, gen_cfg, run_engine
+
+
+def run(rows: list) -> None:
+    for arch in ["llada-8b", "dream-7b"]:
+        bm = build_bench_model(arch)
+        p = bm.prompt.shape[1]
+        van_toks, _, _ = run_engine(bm, gen_cfg(bm, "vanilla"))
+        _, dc_tps, _ = run_engine(bm, gen_cfg(bm, "dualcache"))
+        gc = gen_cfg(bm, "es", parallel_decoding=True, pd_threshold=0.9,
+                     sparse_attention=True, sparse_retention=0.5)
+        toks, tps, dt = run_engine(bm, gc)
+        rows.append((
+            f"table15/{arch}/es+pd+sparse", dt * 1e6,
+            f"tps={tps:.2f} speedup_vs_dc={tps/dc_tps:.2f} "
+            f"agree={agreement(toks, van_toks, p):.3f}",
+        ))

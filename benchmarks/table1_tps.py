@@ -1,0 +1,34 @@
+"""Tables 1/2 (and 7/8): TPS + speedup + quality for vanilla / DualCache /
+ES-dLLM / ES-dLLM* on LLaDA- and Dream-class models.
+
+Quality proxy = generation agreement with vanilla (DESIGN §6).
+"""
+from __future__ import annotations
+
+from benchmarks.common import agreement, build_bench_model, gen_cfg, run_engine
+
+
+def run(rows: list) -> None:
+    for arch, sampler_kw in [
+        ("llada-8b", {}),                                        # low-confidence remask
+        ("dream-7b", dict(remasking="maskgit_plus")),            # temp-0 maskgit
+    ]:
+        bm = build_bench_model(arch)
+        p = bm.prompt.shape[1]
+
+        van_toks, van_tps, van_dt = run_engine(bm, gen_cfg(bm, "vanilla", **sampler_kw))
+        rows.append((f"table1/{arch}/vanilla", van_dt * 1e6,
+                     f"tps={van_tps:.2f} speedup=1.00 agree=1.000"))
+
+        for name, gc in [
+            ("dualcache", gen_cfg(bm, "dualcache", **sampler_kw)),
+            ("es", gen_cfg(bm, "es", **sampler_kw)),
+            ("es_star", gen_cfg(bm, "es", prompt_refresh_period=4,
+                                block_refresh_period=2, **sampler_kw)),
+        ]:
+            toks, tps, dt = run_engine(bm, gc)
+            rows.append((
+                f"table1/{arch}/{name}", dt * 1e6,
+                f"tps={tps:.2f} speedup={tps / van_tps:.2f} "
+                f"agree={agreement(toks, van_toks, p):.3f}",
+            ))

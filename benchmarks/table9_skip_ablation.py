@@ -1,0 +1,38 @@
+"""Table 9: skip ratio & position ablation — FLOPs proportion, TPS speedup
+vs DualCache, and the agreement quality proxy."""
+from __future__ import annotations
+
+from repro.configs import SkipStage
+from repro.core.schedule import flops_proportion
+
+from benchmarks.common import agreement, build_bench_model, gen_cfg, run_engine
+
+
+def run(rows: list) -> None:
+    bm = build_bench_model("llada-8b")
+    model = bm.model
+    p = bm.prompt.shape[1]
+    g = model.n_groups
+    lb = bm.gen_kw["block_length"]
+
+    van_toks, _, _ = run_engine(bm, gen_cfg(bm, "vanilla"))
+    _, dc_tps, dc_dt = run_engine(bm, gen_cfg(bm, "dualcache"))
+    rows.append(("table9/no_skipping", dc_dt * 1e6, "flops=100% speedup=1.00"))
+
+    l1, l2 = max(g // 4, 1), max(g // 2, 2)
+    cases = [
+        ("r1=r2=0.5", (SkipStage(l1, .5), SkipStage(l2, .5))),
+        ("r2=0.75", (SkipStage(l2, .75),)),
+        ("r2=0.5", (SkipStage(l2, .5),)),
+        ("r2=0.25", (SkipStage(l2, .25),)),
+        ("r1=0.5", (SkipStage(l1, .5),)),
+    ]
+    for name, stages in cases:
+        gc = gen_cfg(bm, "es", stages=stages)
+        fp = flops_proportion(model.cfg, gc, lb)
+        toks, tps, dt = run_engine(bm, gc)
+        rows.append((
+            f"table9/{name}", dt * 1e6,
+            f"flops={fp*100:.0f}% speedup={tps/dc_tps:.2f} "
+            f"agree={agreement(toks, van_toks, p):.3f}",
+        ))

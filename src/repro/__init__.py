@@ -1,0 +1,6 @@
+"""repro — ES-dLLM (early-skipping diffusion-LLM inference) on TPU in JAX.
+
+Subpackages: configs (arch registry), models (10-arch zoo), core (the
+paper's technique), kernels (Pallas TPU), train, sharding, launch, runtime.
+"""
+__version__ = "0.1.0"

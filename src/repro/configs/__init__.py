@@ -1,0 +1,116 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``reduced(cfg)`` returns the family-preserving smoke-test variant
+(≤2 pattern periods, d_model ≤ 512, ≤ 4 experts) used by tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    GenerationConfig,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SkipStage,
+    SSMConfig,
+    default_skip_stages,
+    get_config,
+    list_archs,
+    register,
+)
+
+_ARCH_MODULES = [
+    "qwen2_1_5b",
+    "llama3_8b",
+    "granite_moe_1b_a400m",
+    "mamba2_370m",
+    "gemma3_1b",
+    "olmoe_1b_7b",
+    "seamless_m4t_large_v2",
+    "llama3_2_vision_11b",
+    "jamba_v0_1_52b",
+    "chatglm3_6b",
+    "llada_8b",
+    "dream_7b",
+]
+
+_loaded = False
+
+
+def load_all() -> None:
+    global _loaded
+    if _loaded:
+        return
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+    _loaded = True
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Family-preserving reduced variant for CPU smoke tests.
+
+    Keeps layer-pattern structure (attn/ssm/cross/moe interleave) intact while
+    shrinking widths: ≥1 full pattern period of layers, d_model ≤ 512,
+    ≤ 4 experts, small vocab.
+    """
+    period = cfg.pattern_period
+    n_layers = 2 * period if period > 1 else 2
+    d_model = min(cfg.d_model, 256)
+    head_dim = 32
+    n_heads = max(d_model // 64, 2)
+    n_kv_heads = max(1, min(cfg.n_kv_heads, n_heads))
+    # preserve the GQA grouping flavour
+    if cfg.n_kv_heads and cfg.n_heads and cfg.n_kv_heads < cfg.n_heads:
+        n_kv_heads = max(1, n_heads // cfg.q_heads_per_kv)
+    while n_heads % n_kv_heads:
+        n_kv_heads -= 1
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe,
+            n_experts=4,
+            experts_per_token=min(2, cfg.moe.experts_per_token),
+            d_ff_expert=min(cfg.moe.d_ff_expert, 128),
+            router_group_size=64,
+        )
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = dataclasses.replace(cfg.ssm, d_state=16, headdim=16, chunk=16)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-reduced",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads if cfg.family != "ssm" else 0,
+        n_kv_heads=n_kv_heads if cfg.family != "ssm" else 0,
+        head_dim=head_dim if cfg.family != "ssm" else 0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 503),
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+        global_every=min(cfg.global_every, n_layers) if cfg.global_every else 0,
+        moe=moe,
+        ssm=ssm,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        d_enc=min(cfg.d_enc, 128) if cfg.d_enc else 0,
+        n_enc_tokens=min(cfg.n_enc_tokens, 16),
+    )
+
+
+ASSIGNED_ARCHS = [
+    "qwen2-1.5b",
+    "llama3-8b",
+    "granite-moe-1b-a400m",
+    "mamba2-370m",
+    "gemma3-1b",
+    "olmoe-1b-7b",
+    "seamless-m4t-large-v2",
+    "llama-3.2-vision-11b",
+    "jamba-v0.1-52b",
+    "chatglm3-6b",
+]
+
+PAPER_ARCHS = ["llada-8b", "dream-7b"]

@@ -1,0 +1,261 @@
+"""Model / generation / shape configuration system.
+
+Every assigned architecture gets a ``src/repro/configs/<id>.py`` that builds a
+:class:`ModelConfig` with the exact published hyper-parameters (source cited
+in the file).  Configs are registered by id and selectable via ``--arch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    experts_per_token: int
+    d_ff_expert: int
+    router_group_size: int = 512     # GShard-style routing group (tokens)
+    capacity_factor: float = 2.0
+    aux_loss_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64          # SSD chunk length
+    n_groups: int = 1        # B/C groups
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str              # dense | moe | ssm | hybrid | audio | vlm
+    source: str = ""         # citation for the hyperparameters
+
+    # trunk
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # attention details
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0       # chatglm3 applies RoPE to half the dims
+    sliding_window: int = 0          # 0 = full attention
+    global_every: int = 0            # gemma3: every Nth layer is global
+    logit_softcap: float = 0.0
+
+    # feed-forward
+    act: str = "silu"                # silu | gelu
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # MoE
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1               # jamba: MoE on every 2nd layer
+
+    # SSM / hybrid
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 0              # hybrid: layer l is attention iff
+    attn_offset: int = 0             #   l % attn_every == attn_offset
+
+    # encoder-decoder / cross-attention (audio, vlm)
+    n_encoder_layers: int = 0
+    cross_every: int = 0             # decoder layer l has cross-attn iff
+    cross_offset: int = 0            #   cross_every>0 and l%cross_every==cross_offset
+    d_enc: int = 0                   # encoder / modality-embedding width
+    n_enc_tokens: int = 256          # stub frontend output length
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    # ------------------------------------------------------------------
+    # derived helpers
+    # ------------------------------------------------------------------
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def layer_kind(self, l: int) -> str:
+        """Structural kind of decoder layer ``l``: attn | ssm | cross."""
+        if self.cross_every and l % self.cross_every == self.cross_offset:
+            return "cross"
+        if self.attn_every:
+            return "attn" if l % self.attn_every == self.attn_offset else "ssm"
+        if self.family == "ssm":
+            return "ssm"
+        return "attn"
+
+    def layer_is_moe(self, l: int) -> bool:
+        if self.moe is None:
+            return False
+        return l % self.moe_every == (self.moe_every - 1) if self.moe_every > 1 else True
+
+    def layer_is_global_attn(self, l: int) -> bool:
+        """For local:global interleaves (gemma3): True => full attention."""
+        if not self.sliding_window:
+            return True
+        if not self.global_every:
+            return False  # pure sliding window
+        return l % self.global_every == (self.global_every - 1)
+
+    @property
+    def pattern_period(self) -> int:
+        """Length of the repeating heterogeneous layer pattern.
+
+        Layers within one period are unrolled; periods are scanned.  Dense
+        stacks (homogeneous param shapes) use period 1 and per-layer flags.
+        """
+        periods = [1]
+        if self.attn_every:
+            periods.append(self.attn_every)
+        if self.cross_every:
+            periods.append(self.cross_every)
+        if self.moe is not None and self.moe_every > 1:
+            periods.append(self.moe_every)
+        period = 1
+        for p in periods:
+            period = _lcm(period, p)
+        return period
+
+    def validate(self) -> None:
+        if self.family != "ssm":
+            assert self.n_heads > 0 and self.head_dim > 0
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        assert self.vocab_size > 0 and self.d_model > 0 and self.n_layers > 0
+        if self.pattern_period > 1:
+            assert self.n_layers % self.pattern_period == 0, (
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"pattern period {self.pattern_period}"
+            )
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Generation (ES-dLLM) config — paper §6.1 defaults
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SkipStage:
+    """Early-skip applied at the *output* of layer ``layer`` with ratio ``ratio``."""
+
+    layer: int
+    ratio: float
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    gen_length: int = 256
+    block_length: int = 64
+    steps_per_block: int = 0          # 0 => block_length (1 token / step)
+
+    mode: str = "es"                  # vanilla | dualcache | es
+    alpha: float = 0.5                # Eq.1 weighting
+    skip_stages: tuple[SkipStage, ...] = ()
+    indicator: str = "hidden"         # hidden | key | value | query
+
+    # cache refresh periods (iterations), Table 5; 0 = never
+    prompt_refresh_period: int = 64
+    block_refresh_period: int = 4
+
+    # sampling
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    remasking: str = "low_confidence"  # low_confidence | maskgit_plus
+
+    # parallel decoding (Fast-dLLM, App. C.3.1)
+    parallel_decoding: bool = False
+    pd_threshold: float = 0.9
+
+    # sparse attention (Sparse-dLLM, App. C.3.2)
+    sparse_attention: bool = False
+    sparse_retention: float = 0.5
+    sparse_kernel_size: int = 3
+
+    def resolved_steps(self) -> int:
+        return self.steps_per_block or self.block_length
+
+
+def default_skip_stages(n_layers: int, ratio: float = 0.5) -> tuple[SkipStage, ...]:
+    """Paper default: r_{L/8} = r_{L/4} = 0.5 (LLaDA: r_4=r_8, Dream: r_4=r_7)."""
+    l1 = max(n_layers // 8, 1)
+    l2 = max(n_layers // 4, 2)
+    if l2 <= l1:
+        l2 = l1 + 1
+    return (SkipStage(l1, ratio), SkipStage(l2, ratio))
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    # import the config modules lazily so the registry is populated
+    from repro import configs as _configs  # noqa: F401
+
+    _configs.load_all()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[arch_id]()
+    cfg.validate()
+    return cfg
+
+
+def list_archs() -> list[str]:
+    from repro import configs as _configs
+
+    _configs.load_all()
+    return sorted(_REGISTRY)

@@ -1,0 +1,31 @@
+"""Jamba-v0.1-52B — hybrid Mamba+attention 1:7 interleave with 16-expert top-2
+MoE on every other layer. [arXiv:2403.19887]
+
+Adaptation note (DESIGN §4): Jamba v0.1 uses Mamba-1 mixers; we use our
+Mamba-2 SSD mixer (state 64) as the TPU-native equivalent.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, register
+
+
+@register("jamba-v0.1-52b")
+def jamba_v0_1_52b() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        source="arXiv:2403.19887 (Jamba)",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,              # per-expert / dense MLP width
+        vocab_size=65_536,
+        rope_theta=10_000.0,     # jamba uses no RoPE on attn; kept for codepath parity
+        act="silu",
+        rms_eps=1e-6,
+        attn_every=8,            # 1 attention layer per 8 (1:7 attn:mamba)
+        attn_offset=3,
+        moe=MoEConfig(n_experts=16, experts_per_token=2, d_ff_expert=14336),
+        moe_every=2,             # MoE on every 2nd layer
+        ssm=SSMConfig(d_state=64, headdim=64, expand=2, conv_width=4, chunk=64),
+    )

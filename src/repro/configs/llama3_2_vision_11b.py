@@ -1,0 +1,28 @@
+"""Llama-3.2-11B-Vision language backbone — cross-attention image layers every
+5th layer; the ViT vision encoder is a stub providing patch embeddings
+(see DESIGN §4). [hf:meta-llama/Llama-3.2-11B-Vision]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama-3.2-vision-11b")
+def llama3_2_vision_11b() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b",
+        family="vlm",
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=128_256,
+        rope_theta=500_000.0,
+        act="silu",
+        rms_eps=1e-5,
+        cross_every=5,           # layers 3, 8, 13, ... are cross-attention
+        cross_offset=3,
+        d_enc=4096,              # projected patch embeddings
+        n_enc_tokens=1601,       # 1 tile x (40x40 patches + cls)
+    )

@@ -1,0 +1,31 @@
+"""SeamlessM4T-Large-v2 text backbone — enc-dec with cross-attention; the
+mel/conv audio frontend is a stub providing frame embeddings (see DESIGN §4).
+[arXiv:2308.11596]
+
+Assigned "24L" is read as the text decoder depth; a 6-layer transformer
+encoder consumes the stub frame embeddings to keep a real enc-dec path.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("seamless-m4t-large-v2")
+def seamless_m4t_large_v2() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2",
+        family="audio",
+        source="arXiv:2308.11596 (SeamlessM4T)",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=256_206,
+        rope_theta=10_000.0,
+        act="gelu",
+        rms_eps=1e-5,
+        n_encoder_layers=6,
+        cross_every=1,            # every decoder layer cross-attends
+        d_enc=1024,
+        n_enc_tokens=256,         # stub: precomputed audio-frame embeddings
+    )

@@ -1,0 +1,3 @@
+# ES-dLLM core: the paper's contribution as a composable JAX module.
+from repro.core.engine import BlockState, DiffusionEngine, make_engine  # noqa: F401
+from repro.core.schedule import Segment, flops_proportion, resolve_segments  # noqa: F401

@@ -1,0 +1,412 @@
+"""Diffusion-LLM generation engines: vanilla, DualCache, and ES-dLLM.
+
+All three share the block semi-autoregressive loop (LLaDA §3): the output is
+generated block by block; within a block, a ``lax.while_loop`` runs denoising
+iterations until every position is unmasked.  Shapes are fully static — the
+active-set sizes per segment come from the (static) skip schedule — so one
+compiled program serves every iteration and every block.
+
+Engine modes
+------------
+* ``vanilla``   — full-sequence forward every iteration, no caches.
+* ``dualcache`` — Fast-dLLM DualCache: out-of-block KV cached; each iteration
+                  recomputes only the current block (Q=block, KV=cache).
+* ``es``        — the paper: DualCache + early-skip.  At each skip stage the
+                  active set shrinks to the top-k rows by importance (Eq. 1);
+                  K/V/hidden/confidence caches are partially scatter-updated
+                  for computed rows only (Alg. 1), with periodic prompt/block
+                  refreshes (Table 5) bounding error accumulation.
+
+The mask token occupies the first padded-vocab slot (id == vocab_size), so it
+is embeddable but never sampled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GenerationConfig, ModelConfig
+from repro.core import sampler as smp
+from repro.core.schedule import Segment, resolve_segments
+from repro.kernels import ops
+from repro.models.model import ForwardCtx, Model
+
+NEG_INF = -1e30
+
+
+class BlockState(NamedTuple):
+    tokens: jax.Array       # [B, T]
+    caches: Any             # model caches ((), for vanilla)
+    conf: jax.Array         # [B, Lb]  confidence cache
+    pred: jax.Array         # [B, Lb]  predicted-token cache
+    hidden: tuple           # per skip stage: [B, Lb, d] indicator cache
+    kv_valid: jax.Array     # [B, T] bool — sparse-attention retention mask
+    t: jax.Array            # iteration counter within the block
+    key: jax.Array
+
+
+def _row_scatter(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """buf[b, idx[b, k]] = new[b, k] for 2-D/3-D row buffers."""
+    return jax.vmap(lambda c, n, i: c.at[i].set(n.astype(c.dtype)))(buf, new, idx)
+
+
+def _row_gather(buf: jax.Array, idx: jax.Array) -> jax.Array:
+    if buf.ndim == 2:
+        return jnp.take_along_axis(buf, idx, axis=1)
+    return jnp.take_along_axis(buf, idx[..., None], axis=1)
+
+
+class DiffusionEngine:
+    def __init__(
+        self,
+        model: Model,
+        gen: GenerationConfig,
+        *,
+        attn_impl: str = "xla",
+        window_override: int = 0,
+        anchor: int = 0,
+        eos_id: int = 2,
+        disallow_eos: bool = False,
+        importance_impl: str = "xla",
+        act_sharding=None,
+        cache_shardings=None,
+        kv_cache_dtype: str | None = None,   # 'int8' => quantized KV cache
+        moe_sharding=None,
+        inner_sharding=None,
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.gen = gen
+        self.attn_impl = attn_impl
+        self.window_override = window_override
+        self.anchor = anchor
+        self.eos_id = eos_id
+        self.disallow_eos = disallow_eos
+        self.importance_impl = importance_impl
+        self.act_sharding = act_sharding
+        self.cache_shardings = cache_shardings
+        self.kv_cache_dtype = kv_cache_dtype
+        self.moe_sharding = moe_sharding
+        self.inner_sharding = inner_sharding
+        self._jit_run_block = jax.jit(self._run_block)   # compile once, reuse
+
+        self.mask_id = self.cfg.vocab_size          # first padded-vocab slot
+        lb = gen.block_length
+        if gen.mode == "es":
+            self.segments, self.active_sizes = resolve_segments(self.cfg, gen, lb)
+        else:
+            self.segments = [Segment(0, model.n_groups, None, None)]
+            self.active_sizes = [lb]
+        self.n_stages = sum(1 for s in self.segments if s.keep_k is not None)
+        if gen.sparse_attention:
+            assert model.period == 1, "sparse attention: period-1 archs only"
+            assert self.n_stages > 0, (
+                "sparse attention needs >=1 skip stage as its indicator probe; "
+                "use a zero-ratio stage (SkipStage(l, 0.0)) for sparse-only mode"
+            )
+        self.n_per_step = max(1, -(-lb // gen.resolved_steps()))
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def generate(
+        self,
+        params: dict,
+        prompt: jax.Array,             # [B, P] int32
+        key: jax.Array,
+        enc_embeds: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Generate ``gen.gen_length`` tokens after ``prompt``; returns [B, T]."""
+        gen = self.gen
+        b, p = prompt.shape
+        lb = gen.block_length
+        assert gen.gen_length % lb == 0
+        n_blocks = gen.gen_length // lb
+        tokens = jnp.concatenate(
+            [prompt.astype(jnp.int32),
+             jnp.full((b, gen.gen_length), self.mask_id, jnp.int32)], axis=1
+        )
+        enc_out = None
+        if enc_embeds is not None:
+            enc_out = self.model.encode(params, enc_embeds, self.attn_impl)
+
+        for blk in range(n_blocks):
+            key, sub = jax.random.split(key)
+            bs = jnp.asarray(p + blk * lb, jnp.int32)
+            tokens = self._jit_run_block(params, tokens, sub, bs, enc_out)
+        return tokens
+
+    # ------------------------------------------------------------------
+    # per-block loop
+    # ------------------------------------------------------------------
+    def _run_block(self, params, tokens, key, bs, enc_out):
+        gen = self.gen
+        lb = gen.block_length
+        state = self.make_block_state(tokens, key)
+        max_steps = gen.resolved_steps() + 1
+
+        def cond(st: BlockState):
+            blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+            any_masked = jnp.any(blk_tok == self.mask_id)
+            return (st.t == 0) | (any_masked & (st.t < max_steps))
+
+        def body(st: BlockState):
+            if gen.mode == "vanilla":
+                conf, pred, st = self._vanilla_compute(params, st, bs, enc_out)
+                caches, hidden, kv_valid = st.caches, st.hidden, st.kv_valid
+            else:
+                branch = self._branch_index(st.t)
+                caches, conf, pred, hidden, kv_valid = jax.lax.switch(
+                    branch,
+                    [
+                        functools.partial(self._decode_step, params, bs, skip=True),
+                        functools.partial(self._decode_step, params, bs, skip=False),
+                        functools.partial(self._prefill_step, params, bs, enc_out),
+                    ],
+                    st,
+                )
+            return self._apply_unmask(st, bs, caches, conf, pred, hidden, kv_valid)
+
+        state = jax.lax.while_loop(cond, body, state)
+        return state.tokens
+
+    def _apply_unmask(self, st: BlockState, bs, caches, conf, pred, hidden, kv_valid):
+        gen = self.gen
+        lb = gen.block_length
+        blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+        is_masked = blk_tok == self.mask_id
+        sel = smp.select_unmask(conf, is_masked, gen, self.n_per_step)
+        new_blk = jnp.where(sel, pred, blk_tok)
+        new_tokens = jax.lax.dynamic_update_slice(st.tokens, new_blk, (0, bs))
+        key_next, _ = jax.random.split(st.key)
+        return BlockState(new_tokens, caches, conf, pred, hidden,
+                          kv_valid, st.t + 1, key_next)
+
+    # ------------------------------------------------------------------
+    # standalone steps (serving runtime & multi-pod dry-run)
+    # ------------------------------------------------------------------
+    def make_block_state(self, tokens: jax.Array, key: jax.Array) -> BlockState:
+        b, t_total = tokens.shape
+        lb = self.gen.block_length
+        caches = () if self.gen.mode == "vanilla" else self.model.init_cache(
+            b, t_total, lb, kv_dtype=self.kv_cache_dtype)
+        return BlockState(
+            tokens=tokens, caches=caches,
+            conf=jnp.zeros((b, lb), jnp.float32),
+            pred=jnp.zeros((b, lb), jnp.int32),
+            hidden=tuple(jnp.zeros((b, lb, self.cfg.d_model), jnp.float32)
+                         for _ in range(self.n_stages)),
+            kv_valid=jnp.ones((b, t_total), bool),
+            t=jnp.zeros((), jnp.int32), key=key,
+        )
+
+    def decode_iteration(self, params, st: BlockState, bs) -> BlockState:
+        """ONE steady-state ES iteration (paper Alg. 1): the op the decode
+        dry-run shapes lower.  Refresh iterations lower via prefill()."""
+        out = self._decode_step(params, bs, st, skip=True)
+        return self._apply_unmask(st, bs, *out)
+
+    def prefill(self, params, st: BlockState, bs, enc_out=None) -> BlockState:
+        """Cache initialization / prompt refresh as a standalone step."""
+        out = self._prefill_step(params, bs, enc_out, st)
+        return self._apply_unmask(st, bs, *out)
+
+    def _branch_index(self, t: jax.Array) -> jax.Array:
+        gen = self.gen
+        pp, bp = gen.prompt_refresh_period, gen.block_refresh_period
+        prompt_r = (t == 0)
+        if pp > 0:
+            prompt_r |= (t % pp) == 0
+        block_r = jnp.zeros((), bool)
+        if bp > 0:
+            block_r = (t % bp) == 0
+        return jnp.where(prompt_r, 2, jnp.where(block_r, 1, 0)).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # branches
+    # ------------------------------------------------------------------
+    def _ctx(self, mode, positions, **kw) -> ForwardCtx:
+        # sequence-parallel constraint only pays off on full-sequence passes
+        act = self.act_sharding if mode in ("prefill", "nocache") else None
+        return ForwardCtx(
+            positions=positions, mode=mode,
+            window_override=self.window_override, anchor=self.anchor,
+            attn_impl=self.attn_impl, act_sharding=act,
+            cache_shardings=self.cache_shardings,
+            moe_sharding=self.moe_sharding,
+            inner_sharding=self.inner_sharding, **kw,
+        )
+
+    def _prefill_step(self, params, bs, enc_out, st: BlockState):
+        """Full forward over the whole sequence: (re)builds every cache and
+        the block's confidence/prediction/indicator caches (cache init &
+        prompt refresh — paper §5.2 last paragraph)."""
+        model, gen = self.model, self.gen
+        b, t_total = st.tokens.shape
+        lb = gen.block_length
+
+        h = model.embed(params, st.tokens)
+        pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
+        caches = jax.tree_util.tree_map(jnp.zeros_like, st.caches)
+        if self.cache_shardings is not None:
+            caches = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, caches, self.cache_shardings
+            )
+        ctx = self._ctx(
+            "prefill", pos, kv_pos=pos, slot_idx=pos,
+            block_start=jnp.full((b,), bs, jnp.int32), enc_out=enc_out,
+        )
+        hidden = []
+        for seg in self.segments:
+            out = model.run_layers(params, h, ctx, caches,
+                                   group_lo=seg.group_lo, group_hi=seg.group_hi)
+            h, caches = out.h, out.caches
+            if seg.keep_k is not None:
+                hidden.append(
+                    jax.lax.dynamic_slice_in_dim(h, bs, lb, axis=1).astype(jnp.float32)
+                )
+        logits_blk = model.logits(
+            params, jax.lax.dynamic_slice_in_dim(h, bs, lb, axis=1)
+        )
+        conf, pred = self._confidence(st, bs, logits_blk)
+
+        kv_valid = jnp.ones((b, t_total), bool)
+        if gen.sparse_attention:
+            kv_valid = self._sparse_evict(params, caches, hidden, bs, st.tokens)
+        return caches, conf, pred, tuple(hidden), kv_valid
+
+    def _decode_step(self, params, bs, st: BlockState, *, skip: bool):
+        """One diffusion iteration on the current block (paper Alg. 1).
+
+        ``skip=True`` applies the early-skip schedule; ``skip=False`` is the
+        block-refresh variant (all rows computed, caches fully updated)."""
+        model, gen = self.model, self.gen
+        b, t_total = st.tokens.shape
+        lb = gen.block_length
+
+        blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+        h = model.embed(params, blk_tok)
+        s_idx = jnp.broadcast_to(jnp.arange(lb, dtype=jnp.int32)[None], (b, lb))
+        kv_pos = jnp.where(
+            st.kv_valid, jnp.arange(t_total, dtype=jnp.int32)[None], -1
+        )
+        caches = st.caches
+        hidden = list(st.hidden)
+        conf_cache = st.conf
+
+        for seg in self.segments:
+            ctx = self._ctx(
+                "decode", bs + s_idx, kv_pos=kv_pos, slot_idx=bs + s_idx,
+                block_idx=s_idx,
+            )
+            out = model.run_layers(params, h, ctx, caches,
+                                   group_lo=seg.group_lo, group_hi=seg.group_hi)
+            h, caches = out.h, out.caches
+            if seg.keep_k is not None:
+                i = seg.stage_idx
+                h_old = _row_gather(hidden[i], s_idx)
+                conf_s = _row_gather(conf_cache, s_idx)
+                scores = ops.importance_score(
+                    h.astype(jnp.float32), h_old, conf_s,
+                    alpha=gen.alpha, impl=self.importance_impl,
+                )
+                hidden[i] = _row_scatter(hidden[i], h.astype(jnp.float32), s_idx)
+                if skip:
+                    _, sel = jax.lax.top_k(scores, seg.keep_k)
+                    s_idx = jnp.take_along_axis(s_idx, sel, axis=1)
+                    h = jnp.take_along_axis(h, sel[..., None], axis=1)
+
+        logits = model.logits(params, h)                       # [B, |S|, V]
+        key, sub = jax.random.split(st.key)
+        conf_new, pred_new = smp.confidence_and_pred(
+            sub, logits, gen, self.cfg.vocab_size, self.mask_id
+        )
+        conf = _row_scatter(st.conf, conf_new, s_idx)
+        pred = _row_scatter(st.pred, pred_new, s_idx)
+        return caches, conf, pred, tuple(hidden), st.kv_valid
+
+    def _vanilla_compute(self, params, st: BlockState, bs, enc_out):
+        """Full-sequence forward, no caches (the original LLaDA loop)."""
+        model, gen = self.model, self.gen
+        b, t_total = st.tokens.shape
+        lb = gen.block_length
+        h = model.embed(params, st.tokens)
+        pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
+        ctx = self._ctx("nocache", pos, enc_out=enc_out)
+        out = model.run_layers(params, h, ctx, None)
+        logits_blk = model.logits(
+            params, jax.lax.dynamic_slice_in_dim(out.h, bs, lb, axis=1)
+        )
+        conf, pred = self._confidence(st, bs, logits_blk)
+        return conf, pred, st
+
+    # ------------------------------------------------------------------
+    def _confidence(self, st: BlockState, bs, logits_blk):
+        gen = self.gen
+        lb = gen.block_length
+        if self.disallow_eos:
+            blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+            rev = jnp.flip(jnp.cumsum(jnp.flip(blk_tok == self.mask_id, 1), 1), 1)
+            mask_after = (rev - (blk_tok == self.mask_id)) > 0
+            logits_blk = smp.disallow_premature_eos(logits_blk, mask_after, self.eos_id)
+        key, sub = jax.random.split(st.key)
+        return smp.confidence_and_pred(
+            sub, logits_blk, gen, self.cfg.vocab_size, self.mask_id
+        )
+
+    # ------------------------------------------------------------------
+    # Sparse-dLLM-style cache eviction (App. C.3.2 integration)
+    # ------------------------------------------------------------------
+    def _sparse_evict(self, params, caches, hidden, bs, tokens):
+        """Score out-of-block cache rows by the attention they receive from
+        the current block's queries at the first skip-stage layer; retain the
+        top ``sparse_retention`` fraction (kernel-size mean pooling)."""
+        gen, cfg = self.gen, self.cfg
+        b, t_total = tokens.shape
+        lb = gen.block_length
+        stage_seg = next(s for s in self.segments if s.keep_k is not None)
+        g = stage_seg.group_hi                     # layer right after the stage
+        g = min(g, self.model.n_groups - 1)
+        lp = jax.tree_util.tree_map(lambda a: a[g], params["layers"]["0"])
+        from repro.models.common import apply_rope, rms_norm
+
+        h_blk = hidden[stage_seg.stage_idx].astype(jnp.float32)
+        xq = rms_norm(h_blk, lp["ln1"], cfg.rms_eps) @ lp["attn"]["wq"]
+        if "bq" in lp["attn"]:
+            xq = xq + lp["attn"]["bq"]
+        q = xq.reshape(b, lb, cfg.n_heads, cfg.head_dim)
+        q_pos = bs + jnp.broadcast_to(jnp.arange(lb, dtype=jnp.int32)[None], (b, lb))
+        q = apply_rope(q, q_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+        kcache = caches["kv"]["0"].k[g]            # [B, T, Hkv, Dh]
+        group = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(jnp.swapaxes(kcache, 1, 2), group, axis=1)   # [B, Hq, T, Dh]
+        scores = jnp.einsum(
+            "bhqd,bhtd->bhqt",
+            jnp.swapaxes(q, 1, 2).astype(jnp.float32),
+            kk.astype(jnp.float32),
+        ) / (cfg.head_dim ** 0.5)
+        probs = jax.nn.softmax(scores, axis=-1)            # [B, H, Lb, T]
+        recv = jnp.mean(probs, axis=(1, 2))                # [B, T]
+        # kernel-size mean pooling over neighbours
+        ks = gen.sparse_kernel_size
+        pooled = recv
+        if ks > 1:
+            pad = ks // 2
+            padded = jnp.pad(recv, ((0, 0), (pad, pad)), mode="edge")
+            pooled = jnp.mean(
+                jnp.stack([padded[:, i:i + t_total] for i in range(ks)], -1), -1
+            )
+        col = jnp.arange(t_total)[None]
+        in_block = (col >= bs) & (col < bs + lb)
+        cand = jnp.where(in_block, jnp.inf, pooled)
+        n_keep = int(gen.sparse_retention * (t_total - lb)) + lb
+        kth = jnp.sort(cand, axis=-1)[:, -n_keep][:, None]
+        return (cand >= kth) | in_block
+
+
+def make_engine(model: Model, gen: GenerationConfig, **kw) -> DiffusionEngine:
+    return DiffusionEngine(model, gen, **kw)

@@ -1,0 +1,91 @@
+"""Samplers and unmasking policies for diffusion LLM generation.
+
+Covers the paper's settings (App. B.1): low-confidence remasking (LLaDA),
+maskgit-plus with top-k/top-p (Dream), temperature 0 argmax, and
+confidence-aware parallel decoding (Fast-dLLM, App. C.3.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GenerationConfig, ModelConfig
+
+NEG_INF = -1e30
+
+
+def _mask_invalid_vocab(logits: jax.Array, vocab_size: int, mask_id: int) -> jax.Array:
+    """Disallow pad-vocab rows and the [mask] token itself."""
+    v = logits.shape[-1]
+    ids = jnp.arange(v)
+    bad = (ids >= vocab_size) | (ids == mask_id)
+    return jnp.where(bad[None, None, :], NEG_INF, logits)
+
+
+def confidence_and_pred(
+    key: jax.Array,
+    logits: jax.Array,          # [B, K, V]
+    gen: GenerationConfig,
+    vocab_size: int,
+    mask_id: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (conf [B, K] — the probability of the chosen token — and
+    pred [B, K] — the chosen token)."""
+    logits = _mask_invalid_vocab(logits.astype(jnp.float32), vocab_size, mask_id)
+
+    if gen.temperature <= 0.0:
+        probs = jax.nn.softmax(logits, axis=-1)
+        pred = jnp.argmax(probs, axis=-1)
+        conf = jnp.max(probs, axis=-1)
+        return conf, pred.astype(jnp.int32)
+
+    filtered = logits / gen.temperature
+    if gen.top_k > 0:
+        kth = jnp.sort(filtered, axis=-1)[..., -gen.top_k][..., None]
+        filtered = jnp.where(filtered < kth, NEG_INF, filtered)
+    if gen.top_p < 1.0:
+        sorted_logits = jnp.sort(filtered, axis=-1)[..., ::-1]
+        sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(sorted_probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < gen.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        filtered = jnp.where(filtered < cutoff, NEG_INF, filtered)
+    pred = jax.random.categorical(key, filtered, axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    conf = jnp.take_along_axis(probs, pred[..., None], axis=-1)[..., 0]
+    return conf, pred.astype(jnp.int32)
+
+
+def select_unmask(
+    conf: jax.Array,            # [B, Lb] confidence cache (stale for skipped rows)
+    is_masked: jax.Array,       # [B, Lb]
+    gen: GenerationConfig,
+    n_per_step: int,
+) -> jax.Array:
+    """Boolean [B, Lb]: which positions to unmask this iteration.
+
+    Low-confidence remasking unmaske the top-``n_per_step`` masked positions;
+    parallel decoding additionally unmasks every masked position whose
+    confidence exceeds ``pd_threshold`` (always >= 1 position progresses).
+    """
+    cand = jnp.where(is_masked, conf, NEG_INF)
+    # top-n among masked
+    n = max(1, n_per_step)
+    thresh_val = jnp.sort(cand, axis=-1)[:, -n][:, None]
+    top_n = (cand >= thresh_val) & is_masked
+    # never unmask more than n via ties: keep it simple, ties allowed
+    if gen.parallel_decoding:
+        return ((cand > gen.pd_threshold) | top_n) & is_masked
+    return top_n
+
+
+def disallow_premature_eos(
+    logits: jax.Array,          # [B, K, V]
+    any_mask_after: jax.Array,  # [B, K] bool — a mask token still follows
+    eos_id: int,
+) -> jax.Array:
+    """Paper App. B.2: disallow EOS while mask tokens remain after a position
+    (stabilizes coding benchmarks)."""
+    penalty = jnp.where(any_mask_after, NEG_INF, 0.0)
+    return logits.at[..., eos_id].add(penalty)

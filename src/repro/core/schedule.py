@@ -1,0 +1,66 @@
+"""Skip-stage scheduling: resolve paper skip configs to scan-segment plans.
+
+A *segment* is a contiguous range of scan groups executed in one
+``run_layers`` call; at the end of a segment with ``keep_k`` set, the active
+set shrinks to the top-k rows by importance (paper Alg. 1 line 13).  Skip
+layers are rounded to the architecture's pattern-group boundaries
+(DESIGN §8) since the stack scans over groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.base import GenerationConfig, ModelConfig, SkipStage
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    group_lo: int
+    group_hi: int
+    keep_k: int | None      # None = no skipping at this boundary
+    stage_idx: int | None   # index into the hidden-cache tuple
+
+
+def resolve_segments(
+    cfg: ModelConfig,
+    gen: GenerationConfig,
+    block_len: int,
+) -> tuple[list[Segment], list[int]]:
+    """Returns (segments, active_sizes) where active_sizes[i] is the number
+    of active rows *entering* segment i (active_sizes[0] == block_len)."""
+    period = cfg.pattern_period
+    n_groups = cfg.n_layers // period
+
+    # skip boundaries in group space, deduped & ordered
+    boundaries: dict[int, float] = {}
+    if n_groups >= 2:
+        for st in gen.skip_stages:
+            grp = max(1, min(n_groups - 1, round(st.layer / period)))
+            # compound ratios if two stages land on the same group boundary
+            prev = boundaries.get(grp, 0.0)
+            boundaries[grp] = 1.0 - (1.0 - prev) * (1.0 - st.ratio)
+
+    segments: list[Segment] = []
+    active_sizes: list[int] = []
+    size = block_len
+    lo = 0
+    for stage_idx, grp in enumerate(sorted(boundaries)):
+        keep = max(1, int(math.ceil(size * (1.0 - boundaries[grp]))))
+        segments.append(Segment(lo, grp, keep, stage_idx))
+        active_sizes.append(size)
+        size = keep
+        lo = grp
+    segments.append(Segment(lo, n_groups, None, None))
+    active_sizes.append(size)
+    return segments, active_sizes
+
+
+def flops_proportion(cfg: ModelConfig, gen: GenerationConfig, block_len: int) -> float:
+    """Fraction of per-iteration matmul FLOPs retained vs the no-skip
+    baseline (paper Table 9 'FLOPs Prop.'), counting layer cost proportional
+    to active rows per segment."""
+    segments, sizes = resolve_segments(cfg, gen, block_len)
+    total = sum((s.group_hi - s.group_lo) * sz for s, sz in zip(segments, sizes))
+    full = (cfg.n_layers // cfg.pattern_period) * block_len
+    return total / full

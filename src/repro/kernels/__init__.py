@@ -1,0 +1,7 @@
+# Pallas TPU kernels for ES-dLLM's compute hot-spots:
+#   flash_attention — rectangular Q-subset x full-KV attention (decode step)
+#   ssd_scan        — Mamba-2 SSD chunk kernel (mamba2 / jamba mixers)
+#   scatter_kv      — in-place partial cache update (Alg. 1 line 3)
+#   importance      — fused Eq. 1 importance score
+# ops.py exposes jit wrappers with XLA fallbacks; ref.py holds the oracles.
+from repro.kernels import ops, ref  # noqa: F401

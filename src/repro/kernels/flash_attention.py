@@ -1,0 +1,148 @@
+"""Rectangular flash attention Pallas kernel (TPU target).
+
+This is the compute hot-spot of ES-dLLM's decode step: the *gathered* active
+query subset (k <= block tokens, arbitrary positions) attends the *full*
+KV cache.  The kernel streams KV HBM->VMEM in ``block_kv`` tiles while the
+(small) Q tile stays resident, carrying the online-softmax running
+(max, sum, acc) in VMEM scratch across the innermost (sequential) grid dim.
+
+Mask semantics are position-based so gathered Q subsets work naturally:
+  - kv_pos < 0            -> masked (padding / unfilled cache rows)
+  - causal                -> kv_pos <= q_pos
+  - window > 0            -> |q_pos - kv_pos| <= window, with kv_pos < anchor
+                             always attended (prompt-anchor block-sparse
+                             long-context variant, DESIGN §5)
+
+Block shapes are MXU/VPU aligned: head_dim padded to a multiple of 128 by the
+ops.py wrapper, block_q/block_kv multiples of 8 (f32) with 128-lane tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    qpos_ref,   # [1, bq] int32
+    kvpos_ref,  # [1, bk] int32
+    q_ref,      # [1, 1, bq, D]
+    k_ref,      # [1, 1, bk, D]
+    v_ref,      # [1, 1, bk, D]
+    o_ref,      # [1, 1, bq, D]
+    acc_ref,    # VMEM [bq, D] f32
+    m_ref,      # VMEM [bq, 1] f32
+    l_ref,      # VMEM [bq, 1] f32
+    *,
+    scale: float,
+    window: int,
+    anchor: int,
+    causal: bool,
+    n_kv_blocks: int,
+):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)          # [bk, D]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # [bq, bk]
+
+    qp = qpos_ref[0][:, None]                     # [bq, 1]
+    kp = kvpos_ref[0][None, :]                    # [1, bk]
+    mask = kp >= 0
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        win = jnp.abs(qp - kp) <= window
+        if anchor > 0:
+            win |= kp < anchor
+        mask &= win
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                # [bq, 1]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,        # [B, Hq, Lq, D]   (Lq % block_q == 0, D % 128 == 0)
+    k: jax.Array,        # [B, Hkv, Lkv, D] (Lkv % block_kv == 0)
+    v: jax.Array,
+    q_pos: jax.Array,    # [B, Lq] int32
+    kv_pos: jax.Array,   # [B, Lkv] int32
+    *,
+    window: int = 0,
+    anchor: int = 0,
+    causal: bool = False,
+    softmax_scale: float,
+    block_q: int = 128,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    assert lq % block_q == 0 and lkv % block_kv == 0 and d % 128 == 0
+
+    n_q_blocks = lq // block_q
+    n_kv_blocks = lkv // block_kv
+    grid = (b, hq, n_q_blocks, n_kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=softmax_scale,
+        window=window,
+        anchor=anchor,
+        causal=causal,
+        n_kv_blocks=n_kv_blocks,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, h, qi, ki: (bi, qi)),
+            pl.BlockSpec((1, block_kv), lambda bi, h, qi, ki: (bi, ki)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, d), lambda bi, h, qi, ki: (bi, h // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, d), lambda bi, h, qi, ki: (bi, h // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)

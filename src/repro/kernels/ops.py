@@ -1,0 +1,381 @@
+"""Public, jit-friendly wrappers around the Pallas kernels.
+
+Every op has two interchangeable implementations:
+
+  * ``impl="pallas"`` — the Pallas TPU kernel (``interpret=True`` on CPU so
+    the kernel *body* is validated everywhere);
+  * ``impl="xla"``    — a memory-sane pure-jnp lowering with identical math
+    (chunked online-softmax attention, chunked SSD).  This is what the
+    multi-pod dry-run lowers, since Mosaic kernels only compile on real TPUs.
+
+``ref.py`` holds the naive oracles used by the allclose test sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.importance import importance_kernel
+from repro.kernels.scatter_kv import scatter_kv_kernel
+from repro.kernels.ssd_scan import ssd_chunk_kernel
+
+Impl = Literal["xla", "pallas"]
+
+NEG_INF = ref.NEG_INF
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,        # [B, Hq, Lq, D]
+    k: jax.Array,        # [B, Hkv, Lkv, D]
+    v: jax.Array,
+    q_pos: jax.Array,    # [B, Lq] int32
+    kv_pos: jax.Array,   # [B, Lkv] int32 (-1 = invalid)
+    *,
+    window=0,            # static int, or traced scalar (per-layer local:global)
+    anchor: int = 0,
+    causal: bool = False,
+    softmax_scale: float | None = None,
+    impl: Impl = "xla",
+    block_q: int = 128,
+    block_kv: int = 512,
+    kv_chunk: int = 1024,
+    q_chunk: int = 2048,
+    k_scale: jax.Array | None = None,   # [B, Hkv, Lkv]: int8 KV dequant scales
+    v_scale: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Rectangular GQA attention with position-based masking.
+
+    When ``k_scale``/``v_scale`` are given, k/v are int8 and dequantized
+    *per KV chunk inside the scan* — the bf16 cache never materializes.
+    """
+    d = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (d**0.5)
+    if impl == "pallas":
+        assert isinstance(window, int), "pallas path needs a static window"
+        assert k_scale is None, "int8 KV dequant: XLA path only (for now)"
+        return _attention_pallas(
+            q, k, v, q_pos, kv_pos,
+            window=window, anchor=anchor, causal=causal, scale=scale,
+            block_q=block_q, block_kv=block_kv,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+    lq = q.shape[2]
+    if lq > q_chunk and lq % q_chunk == 0:
+        # tile long query spans: peak live tile is [q_chunk, kv_chunk]
+        nq = lq // q_chunk
+        qs = jnp.moveaxis(q.reshape(q.shape[0], q.shape[1], nq, q_chunk, d), 2, 0)
+        qps = jnp.moveaxis(q_pos.reshape(q_pos.shape[0], nq, q_chunk), 1, 0)
+
+        def one(args):
+            qc, qpc = args
+            return _attention_xla_chunked(
+                qc, k, v, qpc, kv_pos,
+                window=window, anchor=anchor, causal=causal, scale=scale,
+                kv_chunk=kv_chunk, k_scale=k_scale, v_scale=v_scale,
+            )
+
+        # checkpointed: backward recomputes one q-tile at a time instead of
+        # saving every tile's online-softmax accumulators
+        out = jax.lax.map(jax.checkpoint(one), (qs, qps))
+        return jnp.moveaxis(out, 0, 2).reshape(q.shape)
+    return _attention_xla_chunked(
+        q, k, v, q_pos, kv_pos,
+        window=window, anchor=anchor, causal=causal, scale=scale,
+        kv_chunk=kv_chunk, k_scale=k_scale, v_scale=v_scale,
+    )
+
+
+def _attention_pallas(q, k, v, q_pos, kv_pos, *, window, anchor, causal, scale,
+                      block_q, block_kv, interpret):
+    b, hq, lq, d = q.shape
+    lkv = k.shape[2]
+    bq = min(block_q, _round_up(lq, 8))
+    bkv = min(block_kv, _round_up(lkv, 128))
+    lq_p = _round_up(lq, bq)
+    lkv_p = _round_up(lkv, bkv)
+    d_p = _round_up(d, 128)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_p - lq), (0, d_p - d)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lkv_p - lkv), (0, d_p - d)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lkv_p - lkv), (0, d_p - d)))
+    qpos_p = jnp.pad(q_pos, ((0, 0), (0, lq_p - lq)))
+    kvpos_p = jnp.pad(kv_pos, ((0, 0), (0, lkv_p - lkv)), constant_values=-1)
+
+    out = flash_attention_kernel(
+        qp, kp, vp, qpos_p.astype(jnp.int32), kvpos_p.astype(jnp.int32),
+        window=window, anchor=anchor, causal=causal, softmax_scale=scale,
+        block_q=bq, block_kv=bkv, interpret=interpret,
+    )
+    return out[:, :, :lq, :d]
+
+
+def _attention_xla_chunked(q, k, v, q_pos, kv_pos, *, window, anchor, causal,
+                           scale, kv_chunk, k_scale=None, v_scale=None):
+    """Online-softmax attention scanning KV in chunks (flash math in jnp).
+
+    Never materializes the [Lq, Lkv] score matrix, so prefill at 32k/500k
+    lowers with O(Lq * kv_chunk) live memory — this is the HLO the dry-run
+    roofline reads.
+    """
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    use_window = not (isinstance(window, int) and window == 0)
+
+    ck = min(kv_chunk, lkv)
+    lkv_p = _round_up(lkv, ck)
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, lkv_p - lkv), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, lkv_p - lkv), (0, 0)))
+    kv_pos = jnp.pad(kv_pos, ((0, 0), (0, lkv_p - lkv)), constant_values=-1)
+    n_chunks = lkv_p // ck
+
+    quant = k_scale is not None
+    if quant:
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, lkv_p - lkv)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, lkv_p - lkv)))
+        kss = jnp.moveaxis(k_scale.reshape(b, hkv, n_chunks, ck), 2, 0)
+        vss = jnp.moveaxis(v_scale.reshape(b, hkv, n_chunks, ck), 2, 0)
+    else:
+        kss = vss = jnp.zeros((n_chunks, 0), jnp.float32)   # placeholder xs
+
+    qf = q.astype(jnp.float32)
+    # [n_chunks, B, Hkv, ck, D] etc. — scanned over axis 0
+    ks = jnp.moveaxis(k.reshape(b, hkv, n_chunks, ck, d), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, hkv, n_chunks, ck, d), 2, 0)
+    ps = jnp.moveaxis(kv_pos.reshape(b, n_chunks, ck), 1, 0)
+
+    qp = q_pos[:, None, :, None]                       # [B,1,Lq,1]
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, pc, ksc, vsc = inp                     # [B,Hkv,ck,D], ..., [B,ck]
+        if quant:
+            # dequantize inside the chunk: int8 rows never materialize wide
+            kc = kc.astype(jnp.float32) * ksc[..., None]
+            vc = vc.astype(jnp.float32) * vsc[..., None]
+        kc = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        vc = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc) * scale
+        kp_ = pc[:, None, None, :]
+        mask = kp_ >= 0
+        if causal:
+            mask &= kp_ <= qp
+        if use_window:
+            win = jnp.abs(qp - kp_) <= window
+            if anchor > 0:
+                win |= kp_ < anchor
+            mask &= win
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, hq, lq), NEG_INF, jnp.float32),
+        jnp.zeros((b, hq, lq), jnp.float32),
+        jnp.zeros((b, hq, lq, d), jnp.float32),
+    )
+    # checkpoint the chunk body: backward recomputes the [Lq, ck] score tile
+    # instead of saving one per chunk (flash-attention recomputation)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), init, (ks, vs, ps, kss, vss))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2)
+# ---------------------------------------------------------------------------
+
+
+def ssd(
+    x: jax.Array,       # [B, L, H, P]
+    dt: jax.Array,      # [B, L, H] positive
+    a_log: jax.Array,   # [H]
+    bmat: jax.Array,    # [B, L, G, N]
+    cmat: jax.Array,    # [B, L, G, N]
+    *,
+    chunk: int = 64,
+    init_state: jax.Array | None = None,    # [B, H, N, P] f32
+    impl: Impl = "xla",
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y [B,L,H,P], final_state [B,H,N,P])."""
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    ck = min(chunk, l) if l % min(chunk, l) == 0 else chunk
+    l_p = _round_up(l, ck)
+    pad = l_p - l
+    if pad:
+        # dt=0 rows are exact no-ops: decay=exp(0)=1, contrib=0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if impl == "pallas":
+        y_intra, contrib, decay, cs = ssd_chunk_kernel(
+            x, dt, a_log, bmat, cmat, chunk=ck,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+    else:
+        y_intra, contrib, decay, cs = _ssd_chunks_xla(x, dt, a_log, bmat, cmat, chunk=ck)
+
+    nc = l_p // ck
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    # inter-chunk state recurrence: S_{c} = decay_c * S_{c-1} + contrib_c
+    def combine(left, right):
+        d1, s1 = left
+        d2, s2 = right
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    decay_t = jnp.moveaxis(decay, 1, 0)                    # [nC, B, H]
+    contrib_t = jnp.moveaxis(contrib, 1, 0)                # [nC, B, H, N, P]
+    # fold the initial state into the first chunk's contribution
+    contrib_t = contrib_t.at[0].add(decay_t[0][..., None, None] * init_state)
+    _, states = jax.lax.associative_scan(combine, (decay_t, contrib_t))
+    final_state = states[-1]                               # [B, H, N, P]
+    # state *entering* chunk c
+    s_in = jnp.concatenate([init_state[None], states[:-1]], axis=0)  # [nC,B,H,N,P]
+    s_in = jnp.moveaxis(s_in, 0, 1)                        # [B, nC, H, N, P]
+
+    heads_per_group = h // g
+    cm = jnp.repeat(cmat, heads_per_group, axis=2)         # [B, L_p, H, N]
+    cm = cm.reshape(b, nc, ck, h, n) * jnp.exp(cs).reshape(b, nc, ck, h)[..., None]
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", cm.astype(jnp.float32), s_in)
+    y = y_intra.astype(jnp.float32) + y_inter.reshape(b, l_p, h, p)
+    return y[:, :l].astype(x.dtype), final_state
+
+
+def _ssd_chunks_xla(x, dt, a_log, bmat, cmat, *, chunk):
+    """Scan-over-chunks jnp version of the Pallas chunk kernel.
+
+    Scanning (with a checkpointed body) keeps only ONE [Q, Q] decay/score
+    tile live at a time — the vectorized form materializes [B, nC, Q, Q, H]
+    (17 GiB/device for mamba2 at train_4k) and sinks the compile."""
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    nc = l // chunk
+    hpg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))                # [H]
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+    tri = row >= col                                       # [Q, Q]
+
+    # [nC, B, Q, ...] scan layout
+    xr = jnp.moveaxis(x.reshape(b, nc, chunk, h, p), 1, 0).astype(jnp.float32)
+    dtr = jnp.moveaxis(dt.reshape(b, nc, chunk, h), 1, 0).astype(jnp.float32)
+    br = jnp.moveaxis(bmat.reshape(b, nc, chunk, g, n), 1, 0).astype(jnp.float32)
+    cr = jnp.moveaxis(cmat.reshape(b, nc, chunk, g, n), 1, 0).astype(jnp.float32)
+
+    def one_chunk(_, inp):
+        xc, dtc, bc, cc = inp                              # [B,Q,H,P], [B,Q,H], [B,Q,G,N] x2
+        bc = jnp.repeat(bc, hpg, axis=2)                   # [B,Q,H,N]
+        cc = jnp.repeat(cc, hpg, axis=2)
+        da = dtc * a                                       # [B,Q,H]
+        cs = jnp.cumsum(da, axis=1)
+        lmat = jnp.where(
+            tri[None, :, :, None],
+            jnp.exp(cs[:, :, None, :] - cs[:, None, :, :]),
+            0.0,
+        )                                                  # [B,Q,Q,H]
+        scores = jnp.einsum("bqhn,bkhn->bqkh", cc, bc) * lmat
+        xdt = xc * dtc[..., None]                          # [B,Q,H,P]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xdt)
+        bscale = bc * jnp.exp(cs[:, -1:, :] - cs)[..., None]
+        contrib = jnp.einsum("bqhn,bqhp->bhnp", bscale, xdt)
+        decay = jnp.exp(cs[:, -1, :])                      # [B, H]
+        return None, (y_intra, contrib, decay, cs)
+
+    _, (y_intra, contrib, decay, cs) = jax.lax.scan(
+        jax.checkpoint(one_chunk), None, (xr, dtr, br, cr)
+    )
+    return (
+        jnp.moveaxis(y_intra, 0, 1).reshape(b, l, h, p),
+        jnp.moveaxis(contrib, 0, 1),                       # [B, nC, H, N, P]
+        jnp.moveaxis(decay, 0, 1),                         # [B, nC, H]
+        jnp.moveaxis(cs, 0, 1).reshape(b, l, h),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scatter cache update
+# ---------------------------------------------------------------------------
+
+
+def scatter_rows(
+    cache: jax.Array,   # [B, S, ...]
+    new: jax.Array,     # [B, K, ...]
+    idx: jax.Array,     # [B, K] int32
+    *,
+    impl: Impl = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """cache[b, idx[b, k]] = new[b, k] (per-batch row scatter)."""
+    if impl == "pallas":
+        shape = cache.shape
+        c4 = cache.reshape(shape[0], shape[1], 1, -1) if cache.ndim != 4 else cache
+        n4 = new.reshape(new.shape[0], new.shape[1], 1, -1) if new.ndim != 4 else new
+        out = scatter_kv_kernel(
+            c4, n4, idx, interpret=_on_cpu() if interpret is None else interpret
+        )
+        return out.reshape(shape)
+    return ref.scatter_kv_reference(
+        cache.reshape(cache.shape[0], cache.shape[1], -1),
+        new.reshape(new.shape[0], new.shape[1], -1),
+        idx,
+    ).reshape(cache.shape)
+
+
+# ---------------------------------------------------------------------------
+# Importance score (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def importance_score(
+    h_new: jax.Array,   # [B, K, d]
+    h_old: jax.Array,   # [B, K, d]
+    conf: jax.Array,    # [B, K]
+    *,
+    alpha: float,
+    eps: float = 1e-8,
+    impl: Impl = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    if impl == "pallas":
+        return importance_kernel(
+            h_new, h_old, conf, alpha=alpha, eps=eps,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+    return ref.importance_reference(h_new, h_old, conf, alpha, eps)
+
+
+__all__ = [
+    "attention",
+    "ssd",
+    "scatter_rows",
+    "importance_score",
+]

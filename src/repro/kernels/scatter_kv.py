@@ -1,0 +1,48 @@
+"""Partial KV-cache scatter update (TPU target).
+
+ES-dLLM recomputes K/V only for the active token subset and scatter-updates
+the full cache in place (paper Alg. 1 line 3).  The row indices are dynamic,
+so we use scalar prefetch: the index array is available before the grid runs
+and drives the *output* BlockSpec index_map — each grid step DMAs one fresh
+[H, D] row directly onto its target cache row.  ``input_output_aliases``
+makes the update truly in place on TPU (the cache never round-trips HBM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(idx_ref, new_ref, cache_ref, out_ref):
+    del idx_ref, cache_ref  # routing happens in the out index_map
+    out_ref[...] = new_ref[...].astype(out_ref.dtype)
+
+
+def scatter_kv_kernel(
+    cache: jax.Array,   # [B, S, H, D]
+    new: jax.Array,     # [B, K, H, D]
+    idx: jax.Array,     # [B, K] int32, unique per row
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = cache.shape
+    k = new.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda bi, ki, idx: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, h, d), lambda bi, ki, idx: (bi, idx[bi, ki], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, d), lambda bi, ki, idx: (bi, idx[bi, ki], 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={2: 0},   # cache (arg index incl. scalar prefetch) -> out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), new, cache)

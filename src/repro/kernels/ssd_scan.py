@@ -1,0 +1,113 @@
+"""Mamba-2 SSD chunk kernel (TPU target).
+
+The SSD (state-space duality) decomposition splits the sequence into chunks:
+within a chunk the recurrence is a small masked "attention" (quadratic in the
+chunk, MXU-friendly); across chunks only an [N, P] state is carried.  This
+kernel computes, per (batch, head, chunk) grid cell, entirely in VMEM:
+
+  * the intra-chunk output  Y_intra = ((C B^T) ⊙ decay-mask) (x·dt)
+  * the chunk's state contribution  Σ_i exp(cs_Q - cs_i)·dt_i·B_i⊗x_i
+  * the total chunk decay  exp(cs_Q)  and per-step cumsum cs
+
+The O(n_chunks) inter-chunk state combine and the rank-1 Y_inter correction
+are cheap and left to XLA in ops.py (lax.associative_scan + einsum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(
+    x_ref,        # [1, Q, 1, P]
+    dt_ref,       # [1, Q, 1]
+    alog_ref,     # [1]
+    b_ref,        # [1, Q, 1, N]
+    c_ref,        # [1, Q, 1, N]
+    y_ref,        # [1, Q, 1, P]   out
+    contrib_ref,  # [1, 1, 1, N, P] out
+    decay_ref,    # [1, 1, 1]      out
+    cs_ref,       # [1, Q, 1]      out
+    *,
+    chunk: int,
+):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # [Q]
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))   # scalar < 0
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)      # [Q, N]
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)      # [Q, N]
+
+    da = dt * a                                     # [Q] log-decay per step
+    cs = jnp.cumsum(da)                             # inclusive cumsum
+
+    # decay mask L[i, j] = exp(cs_i - cs_j) for i >= j else 0
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(row >= col, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * lmat                                        # [Q, Q]
+    xdt = x * dt[:, None]                           # [Q, P]
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # [Q, P]
+
+    bscale = bm * jnp.exp(cs[-1] - cs)[:, None]     # [Q, N]
+    contrib = jax.lax.dot_general(
+        bscale, xdt, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # [N, P]
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    contrib_ref[0, 0, 0, :, :] = contrib
+    decay_ref[0, 0, 0] = jnp.exp(cs[-1])
+    cs_ref[0, :, 0] = cs
+
+
+def ssd_chunk_kernel(
+    x: jax.Array,      # [B, L, H, P], L % chunk == 0
+    dt: jax.Array,     # [B, L, H] positive
+    a_log: jax.Array,  # [H]
+    bmat: jax.Array,   # [B, L, G, N]
+    cmat: jax.Array,   # [B, L, G, N]
+    *,
+    chunk: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (y_intra [B,L,H,P], contrib [B,nC,H,N,P], decay [B,nC,H], cs [B,L,H])."""
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = h // g
+    assert l % chunk == 0
+    nc = l // chunk
+    grid = (b, h, nc)
+
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+        jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+        jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+        jax.ShapeDtypeStruct((b, l, h), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda bi, hi, ci: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, dt, a_log, bmat, cmat)

@@ -1,0 +1,3 @@
+# Launchers: mesh.py (production meshes), dryrun.py (multi-pod dry-run),
+# train.py / serve.py (drivers).  dryrun must be run as a module entry so its
+# XLA_FLAGS line executes before jax initializes devices.

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes, record
+memory/cost/collective analysis for §Dry-run and §Roofline.
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first init.  512 fake host devices back both the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results append to benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json;
+existing artifacts are skipped unless --force.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS  # noqa: E402
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import steps as step_lib  # noqa: E402
+from repro.sharding import specs as sh  # noqa: E402
+from repro.utils.hlo import collective_stats  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun"
+)
+
+
+def _artifact_path(arch: str, shape: str, mesh_name: str,
+                   variant: str | None = None) -> str:
+    suffix = f"__{variant}" if variant else ""
+    return os.path.abspath(
+        os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+    )
+
+
+def _shardings_for(kind, args_struct, mesh, model, variant=None):
+    """Build in_shardings matching input_specs() arg tuples."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if kind == "train":
+        state_s, batch_s = args_struct
+        specs = (
+            sh.train_state_pspecs(state_s, mesh),
+            sh.batch_pspecs(batch_s, mesh),
+        )
+    else:
+        pstruct, state_s, bs_s = args_struct[:3]
+        # pure TP replicates params over 'data'; for very large models
+        # (jamba-52b: 104 GiB bf16 / 16 TP shards = 6.5 GiB) that starves
+        # v5e's 16 GiB HBM -> fall back to 2-D FSDP x TP weight sharding.
+        import numpy as _np
+        param_bytes = sum(
+            int(_np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(pstruct)
+        )
+        tp = mesh.shape.get("model", 1)
+        serve_mode = "train" if param_bytes / tp > 4 * 2**30 else "serve"
+        pspecs = sh.param_pspecs(pstruct, mesh, mode=serve_mode)
+        if variant and "ssm_seqpar" in variant:
+            # §Perf H2: sequence-parallel SSM — replicate mamba mixer weights
+            # (no TP) so the per-layer activation all-reduce disappears; the
+            # cross-chunk state combine is the only cross-shard traffic.
+            from jax.sharding import PartitionSpec as _P
+            from repro.utils.tree import tree_map_with_path_str
+            pspecs = tree_map_with_path_str(
+                lambda path, spec: _P() if "mixer" in path else spec, pspecs)
+        specs = [
+            pspecs,
+            sh.block_state_pspecs(state_s, mesh),
+            P(),
+        ]
+        for extra in args_struct[3:]:          # enc_embeds for audio/vlm
+            specs.append(sh.batch_spec(extra.shape, mesh))
+        specs = tuple(specs)
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, *, verbose: bool = True,
+            variant: str | None = None) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.time()
+    step_fn, args_struct, model = step_lib.input_specs(arch, shape_name, mesh,
+                                                       variant=variant)
+    in_shardings = _shardings_for(shape.kind, args_struct, mesh, model, variant)
+
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+        lowered = jitted.lower(*args_struct)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        # collective traffic is absent from cost_analysis: parse optimized HLO
+        hlo_text = compiled.as_text()
+        coll = collective_stats(hlo_text)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "variant": variant,
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll.as_dict(),
+        "memory": {
+            "argument_size": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_size": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "timing": {"lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)},
+    }
+    if verbose:
+        per_dev_args = result["memory"]["argument_size"]
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:6s} "
+            f"chips={n_chips:4d} flops={result['flops']:.3e} "
+            f"bytes={result['bytes_accessed']:.3e} "
+            f"coll={coll.total_bytes:.3e}B/{coll.total_count} "
+            f"argmem/dev={per_dev_args/2**30:.2f}GiB temp/dev="
+            f"{result['memory']['temp_size']/2**30:.2f}GiB "
+            f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)"
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="perf variant: int8kv / ssm_seqpar / moe_lean (combinable with +)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                path = _artifact_path(arch, shape, mesh_name, args.variant)
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] skip (cached): {os.path.basename(path)}")
+                    continue
+                try:
+                    result = run_one(arch, shape, mesh_name, variant=args.variant)
+                    with open(path, "w") as f:
+                        json.dump(result, f, indent=1)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run combinations lowered and compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

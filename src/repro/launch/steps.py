@@ -1,0 +1,222 @@
+"""Step-function factories + ShapeDtypeStruct input specs for every
+(architecture x input shape) combination — the dry-run lowers exactly these.
+
+Shape -> step mapping (DESIGN §5):
+  train_4k    -> train_step   (masked-diffusion loss + AdamW)
+  prefill_32k -> prefill_step (full forward, builds all ES caches)
+  decode_32k  -> serve_step   (ONE ES iteration: active block vs 32k cache)
+  long_500k   -> serve_step   at 524,288 cache; pure full-attention archs run
+                 the windowed long-context variant (window 8192 + prompt
+                 anchor) — sub-quadratic per DESIGN §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import GenerationConfig, default_skip_stages, get_config, reduced
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.core.engine import DiffusionEngine
+from repro.models.model import Model, build_model
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+LONG_CTX_WINDOW = 8192
+LONG_CTX_ANCHOR = 1024
+
+# archs whose every attention layer is full (no native sub-quadratic path):
+# long_500k uses the windowed variant for these (DESIGN §5)
+FULL_ATTN_ARCHS = {
+    "qwen2-1.5b", "llama3-8b", "chatglm3-6b", "granite-moe-1b-a400m",
+    "olmoe-1b-7b", "seamless-m4t-large-v2", "llama-3.2-vision-11b",
+    "llada-8b", "dream-7b",
+}
+
+
+def dryrun_model_config(arch: str, *, dtype: str = "bfloat16",
+                        variant: str | None = None) -> ModelConfig:
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, param_dtype=dtype, compute_dtype=dtype)
+    if variant and "moe_lean" in variant and cfg.moe is not None:
+        # §Perf H3: decode-time MoE — small routing groups + tighter capacity
+        # cut the GShard one-hot dispatch/combine waste
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, router_group_size=64,
+                                         capacity_factor=1.25))
+    return cfg
+
+
+def serving_gen_config(cfg: ModelConfig, *, block_length: int = 64) -> GenerationConfig:
+    """Paper defaults: r_{L/8} = r_{L/4} = 0.5 (where placeable)."""
+    return GenerationConfig(
+        gen_length=block_length * 4,
+        block_length=block_length,
+        mode="es",
+        skip_stages=default_skip_stages(cfg.n_layers),
+        prompt_refresh_period=64,
+        block_refresh_period=4,
+    )
+
+
+def _prompt_len(shape: InputShape, gen: GenerationConfig) -> int:
+    return shape.seq_len - gen.gen_length
+
+
+# ---------------------------------------------------------------------------
+# step factories — each returns (step_fn, example_args_struct)
+# ---------------------------------------------------------------------------
+
+
+def make_train_fn(model: Model, shape: InputShape, *, act_sharding=None,
+                  ce_chunk: int = 256, moe_sharding=None, inner_sharding=None):
+    cfg = model.cfg
+    opt_cfg = OptimizerConfig()
+    step = make_train_step(model, opt_cfg, ce_chunk=ce_chunk, remat=True,
+                           act_sharding=act_sharding, moe_sharding=moe_sharding,
+                           inner_sharding=inner_sharding)
+    b, l = shape.global_batch, shape.seq_len
+
+    state_struct = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0))
+    )
+    batch_struct = {
+        "tokens": jax.ShapeDtypeStruct((b, l), jnp.int32),
+        "loss_region": jax.ShapeDtypeStruct((b, l), jnp.bool_),
+    }
+    if cfg.family in ("audio", "vlm"):
+        batch_struct["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_enc_tokens, cfg.d_enc or cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+    return step, (state_struct, batch_struct)
+
+
+def _engine_for(model: Model, shape: InputShape, gen: GenerationConfig,
+                arch: str, act_sharding=None, mesh=None,
+                variant: str | None = None) -> DiffusionEngine:
+    window = 0
+    anchor = 0
+    if shape.name == "long_500k" and arch in FULL_ATTN_ARCHS:
+        window, anchor = LONG_CTX_WINDOW, LONG_CTX_ANCHOR
+
+    kv_dtype = "int8" if (variant and "int8kv" in variant) else None
+    cache_shardings = None
+    if mesh is not None:
+        from repro.sharding.specs import cache_pspecs, shardings_of
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     gen.block_length, kv_dtype=kv_dtype)
+        )
+        cache_shardings = shardings_of(cache_pspecs(cache_struct, mesh), mesh)
+    moe_sharding = None
+    inner_sharding = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding.specs import dp_axes
+        if model.cfg.moe is not None:
+            moe_sharding = NamedSharding(mesh, P("data", "model", None, None))
+        if model.cfg.ssm is not None:
+            inner_sharding = NamedSharding(mesh, P(dp_axes(mesh), None, "model"))
+    return DiffusionEngine(
+        model, gen, window_override=window, anchor=anchor,
+        act_sharding=act_sharding, cache_shardings=cache_shardings,
+        kv_cache_dtype=kv_dtype, moe_sharding=moe_sharding,
+        inner_sharding=inner_sharding,
+    )
+
+
+def make_serve_fn(model: Model, shape: InputShape, arch: str, *,
+                  act_sharding=None, mesh=None, variant: str | None = None):
+    """serve_step: ONE ES decode iteration (one new token, full cache)."""
+    gen = serving_gen_config(model.cfg)
+    eng = _engine_for(model, shape, gen, arch, act_sharding, mesh, variant)
+    b, l = shape.global_batch, shape.seq_len
+
+    def serve_step(params, state, bs):
+        return eng.decode_iteration(params, state, bs)
+
+    tok_struct = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    state_struct = jax.eval_shape(
+        lambda: eng.make_block_state(
+            jnp.zeros((b, l), jnp.int32), jax.random.PRNGKey(0)
+        )
+    )
+    bs_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    del tok_struct
+    return serve_step, (state_struct, bs_struct), eng
+
+
+def make_prefill_fn(model: Model, shape: InputShape, arch: str, *,
+                    act_sharding=None, mesh=None, variant: str | None = None):
+    """prefill_step: full forward that (re)builds every ES cache."""
+    gen = serving_gen_config(model.cfg)
+    eng = _engine_for(model, shape, gen, arch, act_sharding, mesh, variant)
+    b, l = shape.global_batch, shape.seq_len
+    cfg = model.cfg
+
+    enc_struct = None
+    if cfg.family in ("audio", "vlm"):
+        enc_struct = jax.ShapeDtypeStruct(
+            (b, cfg.n_enc_tokens, cfg.d_enc or cfg.d_model),
+            jnp.dtype(cfg.compute_dtype),
+        )
+
+    if enc_struct is not None:
+        def prefill_step(params, state, bs, enc_embeds):
+            enc_out = model.encode(params, enc_embeds)
+            return eng.prefill(params, state, bs, enc_out)
+    else:
+        def prefill_step(params, state, bs):
+            return eng.prefill(params, state, bs)
+
+    state_struct = jax.eval_shape(
+        lambda: eng.make_block_state(jnp.zeros((b, l), jnp.int32), jax.random.PRNGKey(0))
+    )
+    bs_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (state_struct, bs_struct) + ((enc_struct,) if enc_struct is not None else ())
+    return prefill_step, args, eng
+
+
+def params_struct(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def input_specs(arch: str, shape_name: str, mesh=None, variant: str | None = None):
+    """Public entry: (step_fn, args_struct_tuple incl. params, model).
+
+    When ``mesh`` is given, full-sequence passes carry a Megatron
+    sequence-parallel activation constraint (h: seq -> 'model' between layer
+    groups) — essential to fit 4k x 16-row activations in 16 GiB HBM.
+    """
+    shape = INPUT_SHAPES[shape_name]
+    cfg = dryrun_model_config(arch, variant=variant)
+    model = build_model(cfg)
+    pstruct = params_struct(model)
+
+    act_sharding = None
+    moe_sharding = None
+    inner_sharding = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding.specs import dp_axes, seq_parallel_spec
+        act_sharding = NamedSharding(mesh, seq_parallel_spec(mesh))
+        if cfg.moe is not None:
+            moe_sharding = NamedSharding(mesh, P("data", "model", None, None))
+        if cfg.ssm is not None:
+            inner_sharding = NamedSharding(mesh, P(dp_axes(mesh), None, "model"))
+
+    if shape.kind == "train":
+        step, (state_s, batch_s) = make_train_fn(model, shape, act_sharding=act_sharding,
+                                                 moe_sharding=moe_sharding,
+                                                 inner_sharding=inner_sharding)
+        return step, (state_s, batch_s), model
+    if shape.kind == "prefill":
+        step, args, _ = make_prefill_fn(model, shape, arch, act_sharding=act_sharding,
+                                        mesh=mesh, variant=variant)
+        return step, (pstruct,) + args, model
+    step, args, _ = make_serve_fn(model, shape, arch, act_sharding=act_sharding,
+                                  mesh=mesh, variant=variant)
+    return step, (pstruct,) + args, model

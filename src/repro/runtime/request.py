@@ -1,0 +1,29 @@
+"""Serving-side request objects and batch assembly."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                     # [P] int32 token ids
+    enc_embeds: Optional[np.ndarray] = None
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # filled by the server
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+def pad_and_stack(requests: list[Request], pad_id: int, prompt_len: int) -> np.ndarray:
+    """Left-pad prompts to a common length and stack to [B, P]."""
+    out = np.full((len(requests), prompt_len), pad_id, np.int32)
+    for i, r in enumerate(requests):
+        p = r.prompt[-prompt_len:]
+        out[i, prompt_len - len(p):] = p
+    return out

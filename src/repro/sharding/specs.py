@@ -1,0 +1,202 @@
+"""Sharding rules for the production meshes (DESIGN §3).
+
+Meshes: single-pod ``(data=16, model=16)`` and multi-pod
+``(pod=2, data=16, model=16)``.  The ``pod`` axis is pure data parallelism
+(batch only); within a pod we run 2-D FSDP x TP for training and pure TP
+(params replicated over ``data``) for serving.
+
+Rules (dim sharded only when divisible — guarded everywhere):
+
+  params   column-parallel (wq/wk/wv/w_gate/w_up/in_proj/router):  (..., data, model)
+           row-parallel (wo/w_down/out_proj):                      (..., model, data)
+           MoE expert stacks (4-D, leading expert dim):  experts -> model, d -> data
+           embed: vocab -> model (tied head => logits vocab-sharded for free)
+           lm_head: (data, model); 1-D leaves replicated
+  batch    tokens (B, L): B -> (pod, data)
+  caches   KV [G,B,S,H,D]: B -> data when divisible; H -> model when divisible
+           else S -> model; if B == 1 (long-context) S -> (data, model)
+  acts     training/prefill sequence-parallel: h [B, L, d] constrained to
+           L -> model between layer blocks (Megatron sequence parallelism)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import tree_map_with_path_str
+
+_COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "router", "lm_head",
+                 "z_proj", "x_proj", "bc_proj", "dt_proj")
+_ROW_PARALLEL = ("wo", "w_down", "out_proj")
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh):
+    """Batch-parallel axes: ('pod', 'data') on multi-pod, else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = axis if isinstance(axis, tuple) else (axis,)
+    total = int(np.prod([mesh_axis_size(mesh, a) for a in sizes]))
+    return dim % total == 0
+
+
+def _guard(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Drop any axis assignment that does not divide its dim."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        out.append(axis if (axis is not None and _div(dim, mesh, axis)) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, *, mode: str = "train") -> P:
+    """mode='train': FSDP(data) x TP(model).  mode='serve': TP only."""
+    fsdp = "data" if mode == "train" else None
+    name = path.split("/")[-1]
+
+    if name == "embed":
+        return _guard(("model", fsdp), shape, mesh)
+    if len(shape) == 0 or len(shape) == 1:
+        return P()
+    # stacked-layer leaves carry a leading group dim; normalize to last dims
+    lead = (None,) * (len(shape) - 2)
+
+    if name in ("w_gate", "w_up") and len(shape) >= 4:        # MoE [.., E, d, f]
+        return _guard((None,) * (len(shape) - 3) + ("model", fsdp, None), shape, mesh)
+    if name == "w_down" and len(shape) >= 4:                  # MoE [.., E, f, d]
+        return _guard((None,) * (len(shape) - 3) + ("model", None, fsdp), shape, mesh)
+
+    if name in _COL_PARALLEL:
+        return _guard(lead + (fsdp, "model"), shape, mesh)
+    if name in _ROW_PARALLEL:
+        return _guard(lead + ("model", fsdp), shape, mesh)
+    if name.startswith("conv_") and len(shape) >= 2:          # [.., W, C] depthwise
+        return _guard(lead + (None, "model"), shape, mesh)
+    # norm scales, biases, gates, dt params: replicate
+    return P()
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, mode: str = "train") -> Any:
+    return tree_map_with_path_str(
+        lambda path, leaf: param_spec(path, leaf.shape, mesh, mode=mode), params
+    )
+
+
+def param_shardings(params: Any, mesh: Mesh, *, mode: str = "train") -> Any:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_pspecs(params, mesh, mode=mode)
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches / activations
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(shape: tuple, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    return _guard((dp,) + (None,) * (len(shape) - 1), shape, mesh)
+
+
+def batch_pspecs(batch: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(lambda leaf: batch_spec(leaf.shape, mesh), batch)
+
+
+def seq_parallel_spec(mesh: Mesh) -> P:
+    """[B, L, d] activations between layer blocks: L on 'model'."""
+    return P(dp_axes(mesh), "model", None)
+
+
+# ---------------------------------------------------------------------------
+# caches (BlockState pytree)
+# ---------------------------------------------------------------------------
+
+
+def cache_leaf_spec(kind: str, shape: tuple, mesh: Mesh) -> P:
+    """kind in {'kv', 'cross', 'ssm', 'ssmh'}; shapes carry a leading group dim."""
+    dmodel = mesh_axis_size(mesh, "model")
+    if kind == "ssmh":                       # [G, B, Lb, d]
+        return _guard((None, "data", None, "model"), shape, mesh)
+    if kind == "ssm":
+        if len(shape) == 5:                  # state [G, B, H, N, P]
+            return _guard((None, "data", "model", None, None), shape, mesh)
+        if len(shape) == 4:                  # conv tail [G, B, W-1, C]
+            return _guard((None, "data", None, "model"), shape, mesh)
+        return P()
+    if len(shape) == 5:                      # kv / cross [G, B, S, H, D]
+        g, b, s, h, d = shape
+        if b == 1:
+            # long-context single request: shard the sequence over both axes
+            return _guard((None, None, ("data", "model"), None, None), shape, mesh)
+        if h % dmodel == 0:
+            return _guard((None, "data", None, "model", None), shape, mesh)
+        return _guard((None, "data", "model", None, None), shape, mesh)
+    if len(shape) == 4 and kind in ("kv", "cross"):   # int8 scales [G, B, S, H]
+        g, b, s, h = shape
+        if b == 1:
+            return _guard((None, None, ("data", "model"), None), shape, mesh)
+        if h % dmodel == 0:
+            return _guard((None, "data", None, "model"), shape, mesh)
+        return _guard((None, "data", "model", None), shape, mesh)
+    return P()
+
+
+def cache_pspecs(caches: Any, mesh: Mesh) -> Any:
+    def rule(path: str, leaf) -> P:
+        kind = path.split("/")[0]
+        return cache_leaf_spec(kind, leaf.shape, mesh)
+
+    return tree_map_with_path_str(rule, caches)
+
+
+def block_state_pspecs(state: Any, mesh: Mesh) -> Any:
+    """Specs for core.engine.BlockState (serve/prefill dry-run)."""
+    from repro.core.engine import BlockState
+
+    return BlockState(
+        tokens=batch_spec(state.tokens.shape, mesh),
+        caches=cache_pspecs(state.caches, mesh) if state.caches != () else (),
+        conf=batch_spec(state.conf.shape, mesh),
+        pred=batch_spec(state.pred.shape, mesh),
+        hidden=tuple(
+            _guard((dp_axes(mesh), None, "model"), h.shape, mesh)
+            for h in state.hidden
+        ),
+        kv_valid=batch_spec(state.kv_valid.shape, mesh),
+        t=P(),
+        key=P(),
+    )
+
+
+def train_state_pspecs(state: Any, mesh: Mesh) -> Any:
+    """Specs for train.train_step.TrainState (FSDP x TP + replicated step)."""
+    from repro.train.optimizer import OptState
+    from repro.train.train_step import TrainState
+
+    pspec = param_pspecs(state.params, mesh, mode="train")
+    return TrainState(
+        params=pspec,
+        opt=OptState(step=P(), mu=pspec, nu=pspec),
+        key=P(),
+    )
+
+
+def shardings_of(pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,5 @@
+from repro.train.data import DataConfig, SyntheticTextDataset  # noqa: F401
+from repro.train.loss import diffusion_loss  # noqa: F401
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state  # noqa: F401
+from repro.train.train_step import TrainState, init_train_state, make_train_step  # noqa: F401
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,57 @@
+"""Flat-npz checkpointing with path-keyed pytree round-tripping.
+
+Sharding-aware on restore: pass ``shardings`` (a pytree of NamedSharding
+matching ``like``) to place leaves directly on the mesh.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import flatten_with_paths
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int | None = None) -> None:
+    flat = flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(
+    path: str,
+    like: Any,
+    *,
+    shardings: Optional[Any] = None,
+) -> tuple[Any, int | None]:
+    """Restore into the structure of ``like``.  Returns (tree, step)."""
+    with np.load(path) as data:
+        step = int(data["__step__"]) if "__step__" in data else None
+        flat_like = flatten_with_paths(like)
+        missing = [k for k in flat_like if k not in data]
+        if missing:
+            raise KeyError(f"checkpoint missing keys: {missing[:5]} ...")
+        leaves = {k: data[k] for k in flat_like}
+
+    paths_sorted = list(flatten_with_paths(like).keys())
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None
+        else [None] * len(like_leaves)
+    )
+    new_leaves = []
+    for key, ref, shard in zip(paths_sorted, like_leaves, shard_leaves):
+        arr = jnp.asarray(leaves[key], dtype=ref.dtype)
+        if shard is not None:
+            arr = jax.device_put(arr, shard)
+        new_leaves.append(arr)
+    return treedef.unflatten(new_leaves), step

@@ -1,0 +1,53 @@
+"""Training-step factory: loss -> grads -> AdamW, jit/pjit-ready."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.loss import diffusion_loss
+from repro.train.optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    key: jax.Array
+
+
+def init_train_state(model: Model, key: jax.Array) -> TrainState:
+    k1, k2 = jax.random.split(key)
+    params = model.init(k1)
+    return TrainState(params, init_opt_state(params), k2)
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig, *,
+                    ce_chunk: int = 256, remat: bool = True, act_sharding=None,
+                    moe_sharding=None, inner_sharding=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch`` = {tokens [B,L] i32, loss_region [B,L] bool,
+    optional enc_embeds [B,E,d_enc]}.
+    """
+
+    def loss_fn(params, key, batch):
+        return diffusion_loss(
+            model, params, key, batch["tokens"], batch["loss_region"],
+            enc_embeds=batch.get("enc_embeds"), ce_chunk=ce_chunk, remat=remat,
+            act_sharding=act_sharding, moe_sharding=moe_sharding,
+            inner_sharding=inner_sharding,
+        )
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        key, sub = jax.random.split(state.key)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, sub, batch
+        )
+        params, opt, opt_metrics = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params, opt, key), metrics
+
+    return train_step

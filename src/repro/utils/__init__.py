@@ -1,0 +1,1 @@
+from repro.utils import tree, hlo  # noqa: F401

@@ -1,0 +1,74 @@
+"""Small pytree utilities used across the framework (no flax/optax offline)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def flatten_with_paths(tree: Any) -> dict[str, Any]:
+    """Flatten a pytree into {'a/b/0/c': leaf} with deterministic ordering."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_entry_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_entry_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    if isinstance(p, jax.tree_util.FlattenedIndexKey):
+        return str(p.key)
+    return str(p)
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives ('a/b/c', leaf)."""
+
+    def wrapper(path, leaf):
+        key = "/".join(_path_entry_str(p) for p in path)
+        return fn(key, leaf)
+
+    return jax.tree_util.tree_map_with_path(wrapper, tree)
+
+
+def cast_floating(tree: Any, dtype) -> Any:
+    """Cast floating-point leaves to `dtype`, leave ints alone."""
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def assert_no_nans(tree: Any, where: str = "") -> None:
+    for key, leaf in flatten_with_paths(tree).items():
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and not np.all(np.isfinite(arr)):
+            raise AssertionError(f"non-finite values at {where}:{key}")

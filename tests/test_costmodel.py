@@ -1,0 +1,58 @@
+"""Analytic cost model (benchmarks/costmodel.py) vs the real models.
+
+The §Roofline terms are analytic (XLA cost_analysis under-counts loop
+bodies), so the model must track the implementation: parameter counts are
+checked against actual init for every registered architecture.
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import costmodel
+from repro import configs
+from repro.configs.base import INPUT_SHAPES
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED_ARCHS + configs.PAPER_ARCHS)
+def test_param_count_matches_init(arch):
+    cfg = configs.get_config(arch)
+    model = build_model(cfg)
+    struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(struct))
+    analytic = costmodel.param_count(cfg)
+    rel = abs(actual - analytic) / actual
+    assert rel < 0.02, f"{arch}: analytic {analytic:.3e} vs init {actual:.3e} ({rel:.1%})"
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "granite-moe-1b-a400m", "mamba2-370m"])
+def test_step_costs_positive_and_ordered(arch):
+    cfg = configs.get_config(arch)
+    from repro.launch.steps import serving_gen_config
+    gen = serving_gen_config(cfg)
+    axes = {"data": 16, "model": 16}
+    train = costmodel.train_step_cost(cfg, INPUT_SHAPES["train_4k"], axes)
+    prefill = costmodel.prefill_cost(cfg, INPUT_SHAPES["prefill_32k"], gen, axes)
+    decode = costmodel.decode_step_cost(cfg, INPUT_SHAPES["decode_32k"], gen, axes)
+    for c in (train, prefill, decode):
+        assert c.flops > 0 and c.hbm_bytes > 0 and c.model_flops > 0
+    # a training step must out-compute a single decode iteration by orders
+    assert train.flops > 100 * decode.flops
+    # ES decode computes less than the full-block reference
+    noskip = costmodel.decode_step_cost(
+        cfg, INPUT_SHAPES["decode_32k"], gen, axes, skip=False)
+    assert decode.flops < noskip.flops
+
+
+def test_active_params_moe():
+    cfg = configs.get_config("olmoe-1b-7b")
+    total = costmodel.param_count(cfg)
+    active = costmodel.active_param_count(cfg)
+    # 64-expert top-8: active well below total, above non-expert share
+    assert active < 0.5 * total
+    assert active > 0.05 * total

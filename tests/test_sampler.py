@@ -1,0 +1,73 @@
+"""Sampler / unmasking-policy properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import GenerationConfig
+from repro.core import sampler as smp
+
+
+def _gc(**kw):
+    return GenerationConfig(gen_length=16, block_length=8, **kw)
+
+
+def test_confidence_argmax_temperature0(rng):
+    logits = jax.random.normal(rng, (2, 8, 50))
+    conf, pred = smp.confidence_and_pred(rng, logits, _gc(), vocab_size=40, mask_id=40)
+    assert (np.asarray(pred) < 40).all(), "pad/mask vocab must never be sampled"
+    probs = jax.nn.softmax(jnp.where(jnp.arange(50) >= 40, -1e30, logits), -1)
+    np.testing.assert_allclose(np.asarray(conf),
+                               np.asarray(jnp.max(probs, -1)), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), temp=st.floats(0.2, 2.0),
+       top_k=st.sampled_from([0, 5, 20]), top_p=st.sampled_from([1.0, 0.9, 0.5]))
+def test_sampled_tokens_respect_filters(seed, temp, top_k, top_p):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (1, 4, 30))
+    gc = _gc(temperature=temp, top_k=top_k, top_p=top_p)
+    conf, pred = smp.confidence_and_pred(key, logits, gc, vocab_size=30, mask_id=30)
+    p = np.asarray(pred)
+    assert (p < 30).all()
+    if top_k:
+        # sampled token must be within the top-k of each row
+        order = np.argsort(-np.asarray(logits[0]), axis=-1)[:, :top_k]
+        for i in range(4):
+            assert p[0, i] in order[i]
+    assert (np.asarray(conf) >= 0).all() and (np.asarray(conf) <= 1).all()
+
+
+def test_select_unmask_topn():
+    conf = jnp.array([[0.9, 0.1, 0.8, 0.3], [0.2, 0.7, 0.1, 0.6]])
+    masked = jnp.array([[True, True, True, False], [True, True, True, True]])
+    sel = smp.select_unmask(conf, masked, _gc(), n_per_step=1)
+    np.testing.assert_array_equal(np.asarray(sel),
+                                  [[True, False, False, False],
+                                   [False, True, False, False]])
+
+
+def test_select_unmask_parallel_decoding():
+    conf = jnp.array([[0.95, 0.92, 0.5, 0.99]])
+    masked = jnp.array([[True, True, True, False]])
+    sel = smp.select_unmask(conf, masked, _gc(parallel_decoding=True,
+                                              pd_threshold=0.9), n_per_step=1)
+    # both above-threshold positions unmask; the unmasked slot never does
+    np.testing.assert_array_equal(np.asarray(sel), [[True, True, False, False]])
+
+
+def test_select_unmask_always_progresses():
+    conf = jnp.zeros((2, 6))
+    masked = jnp.ones((2, 6), bool)
+    sel = smp.select_unmask(conf, masked, _gc(parallel_decoding=True,
+                                              pd_threshold=0.99), n_per_step=1)
+    assert np.asarray(sel).any(axis=1).all(), "at least one unmask per iteration"
+
+
+def test_disallow_premature_eos():
+    logits = jnp.zeros((1, 3, 10))
+    mask_after = jnp.array([[True, True, False]])
+    out = smp.disallow_premature_eos(logits, mask_after, eos_id=2)
+    assert float(out[0, 0, 2]) < -1e20
+    assert float(out[0, 2, 2]) == 0.0
