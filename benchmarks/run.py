@@ -12,6 +12,7 @@ import traceback
 from benchmarks import (
     fig1_confidence,
     fig2_hidden_variation,
+    serving,
     table1_tps,
     table9_skip_ablation,
     table10_skip_times,
@@ -21,6 +22,7 @@ from benchmarks import (
 )
 
 MODULES = [
+    ("serving", serving),
     ("table1", table1_tps),
     ("table9", table9_skip_ablation),
     ("table10", table10_skip_times),

@@ -1,5 +1,6 @@
 """End-to-end serving driver (deliverable b): batched requests through the
-BatchServer with ES-dLLM + parallel decoding, reporting TPS per engine mode.
+continuous-batching StreamScheduler with ES-dLLM + parallel decoding,
+reporting TPS per engine mode plus a lock-step-vs-streaming comparison.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch llada-8b]
 """
@@ -11,7 +12,7 @@ import numpy as np
 from repro import configs
 from repro.configs import GenerationConfig, default_skip_stages
 from repro.models import build_model
-from repro.runtime import BatchServer, Request
+from repro.runtime import BatchServer, Request, StreamScheduler
 
 
 def main() -> None:
@@ -45,15 +46,24 @@ def main() -> None:
     }
     base_tps = None
     for name, gen in modes.items():
-        server = BatchServer(model, params, gen, batch_size=4, prompt_len=24)
+        sched = StreamScheduler(model, params, gen, max_slots=4, prompt_len=24)
         for r in mk_requests():
-            server.submit(r)
-        done = server.drain()
-        tps = server.stats.tps
+            sched.submit(r)
+        done = sched.drain()
+        tps = sched.stats.goodput
         if base_tps is None:
             base_tps = tps
         print(f"{name:10s} served={len(done):3d}  TPS={tps:8.2f}  "
-              f"speedup={tps/base_tps:5.2f}x  wall={server.stats.wall_s:6.2f}s")
+              f"speedup={tps/base_tps:5.2f}x  wall={sched.stats.wall_s:6.2f}s  "
+              f"p95={sched.stats.latency_pct(95):5.2f}s")
+
+    # lock-step baseline on the es mode, same traffic, for comparison
+    server = BatchServer(model, params, gen=modes["es"], batch_size=4, prompt_len=24)
+    for r in mk_requests():
+        server.submit(r)
+    server.drain()
+    print(f"{'es(lock)':10s} served={args.requests:3d}  "
+          f"TPS={server.stats.tps:8.2f}  (lock-step baseline)")
 
 
 if __name__ == "__main__":

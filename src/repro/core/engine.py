@@ -17,6 +17,18 @@ Engine modes
                   for computed rows only (Alg. 1), with periodic prompt/block
                   refreshes (Table 5) bounding error accumulation.
 
+Slot-based serving state
+------------------------
+All per-block progress is slot-addressable: the block offset ``bs`` is a
+per-row ``[B]`` vector (a scalar is broadcast for the offline path), so
+different batch rows may sit on different blocks of their own requests.
+``EngineState`` extends the per-block caches with per-slot counters and an
+``active`` mask; ``step()`` is ONE jitted program that advances every slot by
+one denoising iteration regardless of which slots are prefilling, decoding,
+or idle.  Slots stay phase-aligned (admission happens on block boundaries —
+see runtime.scheduler), so the prefill/refresh cadence is a single traced
+branch index shared by all rows while ``bs`` stays per-row.
+
 The mask token occupies the first padded-vocab slot (id == vocab_size), so it
 is embeddable but never sampled.
 """
@@ -45,6 +57,28 @@ class BlockState(NamedTuple):
     hidden: tuple           # per skip stage: [B, Lb, d] indicator cache
     kv_valid: jax.Array     # [B, T] bool — sparse-attention retention mask
     t: jax.Array            # iteration counter within the block
+    key: jax.Array
+
+
+class EngineState(NamedTuple):
+    """Slot-addressable serving state: BlockState fields + per-slot progress.
+
+    Every per-request quantity is a ``[B]`` vector indexed by slot; the
+    within-block iteration phase is a single scalar because the scheduler
+    aligns admission to block boundaries (all resident slots share the same
+    within-block cadence while sitting on *different* blocks).
+    """
+    tokens: jax.Array        # [B, T]
+    caches: Any
+    conf: jax.Array          # [B, Lb]
+    pred: jax.Array          # [B, Lb]
+    hidden: tuple
+    kv_valid: jax.Array      # [B, T]
+    bs: jax.Array            # [B] per-slot block offset (start of current block)
+    blocks_left: jax.Array   # [B] blocks not yet completed (incl. current)
+    phase: jax.Array         # [] within-block iteration phase (shared cadence)
+    iters: jax.Array         # [B] per-slot lifetime iteration counter
+    active: jax.Array        # [B] bool — slot holds a live request
     key: jax.Array
 
 
@@ -92,6 +126,8 @@ class DiffusionEngine:
         self.moe_sharding = moe_sharding
         self.inner_sharding = inner_sharding
         self._jit_run_block = jax.jit(self._run_block)   # compile once, reuse
+        self._jit_step = jax.jit(self._engine_step)
+        self.step_trace_count = 0   # incremented per trace of _engine_step
 
         self.mask_id = self.cfg.vocab_size          # first padded-vocab slot
         lb = gen.block_length
@@ -108,6 +144,21 @@ class DiffusionEngine:
                 "use a zero-ratio stage (SkipStage(l, 0.0)) for sparse-only mode"
             )
         self.n_per_step = max(1, -(-lb // gen.resolved_steps()))
+
+    # ------------------------------------------------------------------
+    # per-row block indexing
+    # ------------------------------------------------------------------
+    def _bs_rows(self, bs, b: int) -> jax.Array:
+        """Normalize a block offset (scalar or [B]) to a per-row [B] vector."""
+        bs = jnp.asarray(bs, jnp.int32)
+        if bs.ndim == 0:
+            bs = jnp.broadcast_to(bs, (b,))
+        return bs
+
+    def _block_cols(self, bs: jax.Array) -> jax.Array:
+        """[B] block offsets -> [B, Lb] absolute column indices."""
+        lb = self.gen.block_length
+        return bs[:, None] + jnp.arange(lb, dtype=jnp.int32)[None]
 
     # ------------------------------------------------------------------
     # public API
@@ -135,7 +186,7 @@ class DiffusionEngine:
 
         for blk in range(n_blocks):
             key, sub = jax.random.split(key)
-            bs = jnp.asarray(p + blk * lb, jnp.int32)
+            bs = jnp.full((b,), p + blk * lb, jnp.int32)
             tokens = self._jit_run_block(params, tokens, sub, bs, enc_out)
         return tokens
 
@@ -144,43 +195,34 @@ class DiffusionEngine:
     # ------------------------------------------------------------------
     def _run_block(self, params, tokens, key, bs, enc_out):
         gen = self.gen
-        lb = gen.block_length
+        bs = self._bs_rows(bs, tokens.shape[0])
         state = self.make_block_state(tokens, key)
         max_steps = gen.resolved_steps() + 1
 
         def cond(st: BlockState):
-            blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+            blk_tok = _row_gather(st.tokens, self._block_cols(bs))
             any_masked = jnp.any(blk_tok == self.mask_id)
             return (st.t == 0) | (any_masked & (st.t < max_steps))
 
         def body(st: BlockState):
-            if gen.mode == "vanilla":
-                conf, pred, st = self._vanilla_compute(params, st, bs, enc_out)
-                caches, hidden, kv_valid = st.caches, st.hidden, st.kv_valid
-            else:
-                branch = self._branch_index(st.t)
-                caches, conf, pred, hidden, kv_valid = jax.lax.switch(
-                    branch,
-                    [
-                        functools.partial(self._decode_step, params, bs, skip=True),
-                        functools.partial(self._decode_step, params, bs, skip=False),
-                        functools.partial(self._prefill_step, params, bs, enc_out),
-                    ],
-                    st,
-                )
-            return self._apply_unmask(st, bs, caches, conf, pred, hidden, kv_valid)
+            outs = self._iteration_outputs(params, st, bs, enc_out)
+            return self._apply_unmask(st, bs, *outs)
 
         state = jax.lax.while_loop(cond, body, state)
         return state.tokens
 
-    def _apply_unmask(self, st: BlockState, bs, caches, conf, pred, hidden, kv_valid):
+    def _apply_unmask(self, st: BlockState, bs, caches, conf, pred, hidden,
+                      kv_valid, active: Optional[jax.Array] = None):
         gen = self.gen
-        lb = gen.block_length
-        blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+        bs = self._bs_rows(bs, st.tokens.shape[0])
+        cols = self._block_cols(bs)
+        blk_tok = _row_gather(st.tokens, cols)
         is_masked = blk_tok == self.mask_id
         sel = smp.select_unmask(conf, is_masked, gen, self.n_per_step)
+        if active is not None:
+            sel = sel & active[:, None]
         new_blk = jnp.where(sel, pred, blk_tok)
-        new_tokens = jax.lax.dynamic_update_slice(st.tokens, new_blk, (0, bs))
+        new_tokens = _row_scatter(st.tokens, new_blk, cols)
         key_next, _ = jax.random.split(st.key)
         return BlockState(new_tokens, caches, conf, pred, hidden,
                           kv_valid, st.t + 1, key_next)
@@ -206,13 +248,34 @@ class DiffusionEngine:
     def decode_iteration(self, params, st: BlockState, bs) -> BlockState:
         """ONE steady-state ES iteration (paper Alg. 1): the op the decode
         dry-run shapes lower.  Refresh iterations lower via prefill()."""
+        bs = self._bs_rows(bs, st.tokens.shape[0])
         out = self._decode_step(params, bs, st, skip=True)
         return self._apply_unmask(st, bs, *out)
 
     def prefill(self, params, st: BlockState, bs, enc_out=None) -> BlockState:
         """Cache initialization / prompt refresh as a standalone step."""
+        bs = self._bs_rows(bs, st.tokens.shape[0])
         out = self._prefill_step(params, bs, enc_out, st)
         return self._apply_unmask(st, bs, *out)
+
+    def _iteration_outputs(self, params, st: BlockState, bs, enc_out):
+        """Branch-dispatched compute for ONE denoising iteration at phase
+        ``st.t`` — shared by the offline block loop and the serving step so
+        the prefill/refresh/skip cadence can never diverge between them.
+        Returns ``(caches, conf, pred, hidden, kv_valid)``."""
+        if self.gen.mode == "vanilla":
+            conf, pred, st = self._vanilla_compute(params, st, bs, enc_out)
+            return st.caches, conf, pred, st.hidden, st.kv_valid
+        branch = self._branch_index(st.t)
+        return jax.lax.switch(
+            branch,
+            [
+                functools.partial(self._decode_step, params, bs, skip=True),
+                functools.partial(self._decode_step, params, bs, skip=False),
+                functools.partial(self._prefill_step, params, bs, enc_out),
+            ],
+            st,
+        )
 
     def _branch_index(self, t: jax.Array) -> jax.Array:
         gen = self.gen
@@ -224,6 +287,71 @@ class DiffusionEngine:
         if bp > 0:
             block_r = (t % bp) == 0
         return jnp.where(prompt_r, 2, jnp.where(block_r, 1, 0)).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # slot-based continuous serving (runtime.scheduler drives this)
+    # ------------------------------------------------------------------
+    def init_engine_state(self, batch: int, prompt_len: int,
+                          key: jax.Array) -> EngineState:
+        """All-idle slot state for a serving loop of ``batch`` slots.
+
+        ``prompt_len`` fixes the (padded) prompt region; the total sequence
+        is ``prompt_len + gen_length``.  Idle slots hold mask tokens and an
+        ``active=False`` row until the scheduler admits a request.
+        """
+        t_total = prompt_len + self.gen.gen_length
+        tokens = jnp.full((batch, t_total), self.mask_id, jnp.int32)
+        bst = self.make_block_state(tokens, key)
+        return EngineState(
+            tokens=bst.tokens, caches=bst.caches, conf=bst.conf, pred=bst.pred,
+            hidden=bst.hidden, kv_valid=bst.kv_valid,
+            bs=jnp.full((batch,), prompt_len, jnp.int32),
+            blocks_left=jnp.zeros((batch,), jnp.int32),
+            phase=bst.t,
+            iters=jnp.zeros((batch,), jnp.int32),
+            active=jnp.zeros((batch,), bool),
+            key=bst.key,
+        )
+
+    def step(self, params, state: EngineState,
+             enc_out: Optional[jax.Array] = None) -> EngineState:
+        """ONE denoising iteration for every resident slot — a single jitted
+        program whose shape is independent of which slots are prefilling,
+        decoding, or idle (traced branch index + per-row masks)."""
+        return self._jit_step(params, state, enc_out)
+
+    def _engine_step(self, params, state: EngineState, enc_out) -> EngineState:
+        self.step_trace_count += 1        # python side effect: counts traces
+        gen = self.gen
+        lb = gen.block_length
+        steps_pb = gen.resolved_steps()
+        bs = state.bs
+        st = BlockState(state.tokens, state.caches, state.conf, state.pred,
+                        state.hidden, state.kv_valid, state.phase, state.key)
+        outs = self._iteration_outputs(params, st, bs, enc_out)
+        st = self._apply_unmask(st, bs, *outs, active=state.active)
+
+        phase = (state.phase + 1) % steps_pb
+        iters = state.iters + state.active.astype(jnp.int32)
+
+        # block-boundary advancement: rows whose block fully unmasked move to
+        # their next block (or complete); shapes stay static — the boundary
+        # predicate just masks the update off on non-boundary iterations.
+        blk_tok = _row_gather(st.tokens, self._block_cols(bs))
+        blk_done = ~jnp.any(blk_tok == self.mask_id, axis=1)
+        boundary = phase == 0
+        adv = state.active & blk_done & boundary
+        blocks_left = state.blocks_left - adv.astype(jnp.int32)
+        finished = adv & (blocks_left == 0)
+        new_bs = jnp.where(adv & ~finished, bs + lb, bs)
+        active = state.active & ~finished
+
+        return EngineState(
+            tokens=st.tokens, caches=st.caches, conf=st.conf, pred=st.pred,
+            hidden=st.hidden, kv_valid=st.kv_valid,
+            bs=new_bs, blocks_left=blocks_left, phase=phase,
+            iters=iters, active=active, key=st.key,
+        )
 
     # ------------------------------------------------------------------
     # branches
@@ -246,7 +374,7 @@ class DiffusionEngine:
         prompt refresh — paper §5.2 last paragraph)."""
         model, gen = self.model, self.gen
         b, t_total = st.tokens.shape
-        lb = gen.block_length
+        cols = self._block_cols(bs)
 
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
@@ -257,7 +385,7 @@ class DiffusionEngine:
             )
         ctx = self._ctx(
             "prefill", pos, kv_pos=pos, slot_idx=pos,
-            block_start=jnp.full((b,), bs, jnp.int32), enc_out=enc_out,
+            block_start=bs, enc_out=enc_out,
         )
         hidden = []
         for seg in self.segments:
@@ -265,12 +393,8 @@ class DiffusionEngine:
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)
             h, caches = out.h, out.caches
             if seg.keep_k is not None:
-                hidden.append(
-                    jax.lax.dynamic_slice_in_dim(h, bs, lb, axis=1).astype(jnp.float32)
-                )
-        logits_blk = model.logits(
-            params, jax.lax.dynamic_slice_in_dim(h, bs, lb, axis=1)
-        )
+                hidden.append(_row_gather(h, cols).astype(jnp.float32))
+        logits_blk = model.logits(params, _row_gather(h, cols))
         conf, pred = self._confidence(st, bs, logits_blk)
 
         kv_valid = jnp.ones((b, t_total), bool)
@@ -287,7 +411,7 @@ class DiffusionEngine:
         b, t_total = st.tokens.shape
         lb = gen.block_length
 
-        blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+        blk_tok = _row_gather(st.tokens, self._block_cols(bs))
         h = model.embed(params, blk_tok)
         s_idx = jnp.broadcast_to(jnp.arange(lb, dtype=jnp.int32)[None], (b, lb))
         kv_pos = jnp.where(
@@ -299,8 +423,8 @@ class DiffusionEngine:
 
         for seg in self.segments:
             ctx = self._ctx(
-                "decode", bs + s_idx, kv_pos=kv_pos, slot_idx=bs + s_idx,
-                block_idx=s_idx,
+                "decode", bs[:, None] + s_idx, kv_pos=kv_pos,
+                slot_idx=bs[:, None] + s_idx, block_idx=s_idx,
             )
             out = model.run_layers(params, h, ctx, caches,
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)
@@ -330,31 +454,27 @@ class DiffusionEngine:
 
     def _vanilla_compute(self, params, st: BlockState, bs, enc_out):
         """Full-sequence forward, no caches (the original LLaDA loop)."""
-        model, gen = self.model, self.gen
+        model = self.model
         b, t_total = st.tokens.shape
-        lb = gen.block_length
+        bs = self._bs_rows(bs, b)
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
         ctx = self._ctx("nocache", pos, enc_out=enc_out)
         out = model.run_layers(params, h, ctx, None)
-        logits_blk = model.logits(
-            params, jax.lax.dynamic_slice_in_dim(out.h, bs, lb, axis=1)
-        )
+        logits_blk = model.logits(params, _row_gather(out.h, self._block_cols(bs)))
         conf, pred = self._confidence(st, bs, logits_blk)
         return conf, pred, st
 
     # ------------------------------------------------------------------
     def _confidence(self, st: BlockState, bs, logits_blk):
-        gen = self.gen
-        lb = gen.block_length
         if self.disallow_eos:
-            blk_tok = jax.lax.dynamic_slice_in_dim(st.tokens, bs, lb, axis=1)
+            blk_tok = _row_gather(st.tokens, self._block_cols(bs))
             rev = jnp.flip(jnp.cumsum(jnp.flip(blk_tok == self.mask_id, 1), 1), 1)
             mask_after = (rev - (blk_tok == self.mask_id)) > 0
             logits_blk = smp.disallow_premature_eos(logits_blk, mask_after, self.eos_id)
         key, sub = jax.random.split(st.key)
         return smp.confidence_and_pred(
-            sub, logits_blk, gen, self.cfg.vocab_size, self.mask_id
+            sub, logits_blk, self.gen, self.cfg.vocab_size, self.mask_id
         )
 
     # ------------------------------------------------------------------
@@ -378,7 +498,7 @@ class DiffusionEngine:
         if "bq" in lp["attn"]:
             xq = xq + lp["attn"]["bq"]
         q = xq.reshape(b, lb, cfg.n_heads, cfg.head_dim)
-        q_pos = bs + jnp.broadcast_to(jnp.arange(lb, dtype=jnp.int32)[None], (b, lb))
+        q_pos = self._block_cols(bs)
         q = apply_rope(q, q_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
 
         kcache = caches["kv"]["0"].k[g]            # [B, T, Hkv, Dh]
@@ -401,7 +521,7 @@ class DiffusionEngine:
                 jnp.stack([padded[:, i:i + t_total] for i in range(ks)], -1), -1
             )
         col = jnp.arange(t_total)[None]
-        in_block = (col >= bs) & (col < bs + lb)
+        in_block = (col >= bs[:, None]) & (col < (bs + lb)[:, None])
         cand = jnp.where(in_block, jnp.inf, pooled)
         n_keep = int(gen.sparse_retention * (t_total - lb)) + lb
         kth = jnp.sort(cand, axis=-1)[:, -n_keep][:, None]

@@ -32,7 +32,7 @@ from repro.configs.base import INPUT_SHAPES  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import steps as step_lib  # noqa: E402
 from repro.sharding import specs as sh  # noqa: E402
-from repro.utils.hlo import collective_stats  # noqa: E402
+from repro.utils.hlo import collective_stats, cost_analysis_dict  # noqa: E402
 
 ARTIFACT_DIR = os.path.join(
     os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun"
@@ -81,7 +81,7 @@ def _shardings_for(kind, args_struct, mesh, model, variant=None):
         specs = [
             pspecs,
             sh.block_state_pspecs(state_s, mesh),
-            P(),
+            sh.batch_spec(bs_s.shape, mesh),     # per-row [B] block offsets
         ]
         for extra in args_struct[3:]:          # enc_embeds for audio/vlm
             specs.append(sh.batch_spec(extra.shape, mesh))
@@ -111,7 +111,7 @@ def run_one(arch: str, shape_name: str, mesh_name: str, *, verbose: bool = True,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         # collective traffic is absent from cost_analysis: parse optimized HLO
         hlo_text = compiled.as_text()
         coll = collective_stats(hlo_text)

@@ -1,5 +1,10 @@
-"""Serving launcher: run the batched ES-dLLM server on a reduced model
+"""Serving launcher: run the ES-dLLM serving runtime on a reduced model
 (CPU-runnable end-to-end driver, deliverable b).
+
+Two runtimes:
+  * ``stream`` (default) — continuous batching: slot admission at block
+    boundaries, slot recycling on completion, per-request block streaming.
+  * ``batch``  — the lock-step micro-batching baseline (paper §6.1 setting).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llada-8b --requests 16
 """
@@ -13,7 +18,7 @@ import numpy as np
 from repro import configs
 from repro.configs import GenerationConfig, default_skip_stages
 from repro.models import build_model
-from repro.runtime import BatchServer, Request
+from repro.runtime import BatchServer, Request, StreamScheduler
 
 
 def main() -> None:
@@ -22,12 +27,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full config (default: reduced, CPU-runnable)")
     ap.add_argument("--mode", default="es", choices=["vanilla", "dualcache", "es"])
+    ap.add_argument("--runtime", default="stream", choices=["stream", "batch"])
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="batch size (lock-step) / slot count (stream)")
     ap.add_argument("--gen-length", type=int, default=32)
     ap.add_argument("--block-length", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--parallel-decoding", action="store_true")
+    ap.add_argument("--stream-print", action="store_true",
+                    help="print each request's blocks as they unmask")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -45,8 +54,18 @@ def main() -> None:
         block_refresh_period=4,
         parallel_decoding=args.parallel_decoding,
     )
-    server = BatchServer(model, params, gen, batch_size=args.batch,
-                         prompt_len=args.prompt_len)
+
+    stream_cb = None
+    if args.stream_print:
+        def stream_cb(req, bi, blk):
+            print(f"  [stream] req={req.request_id} block={bi}: {blk.tolist()}")
+
+    if args.runtime == "stream":
+        server = StreamScheduler(model, params, gen, max_slots=args.batch,
+                                 prompt_len=args.prompt_len, stream_cb=stream_cb)
+    else:
+        server = BatchServer(model, params, gen, batch_size=args.batch,
+                             prompt_len=args.prompt_len)
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
@@ -54,8 +73,13 @@ def main() -> None:
         server.submit(Request(prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32)))
 
     done = server.drain()
-    print(f"served {len(done)} requests  mode={args.mode}  "
-          f"TPS={server.stats.tps:.2f}  wall={server.stats.wall_s:.2f}s")
+    line = (f"served {len(done)} requests  runtime={args.runtime}  "
+            f"mode={args.mode}  TPS={server.stats.tps:.2f}  "
+            f"wall={server.stats.wall_s:.2f}s")
+    if args.runtime == "stream":
+        line += (f"  p50={server.stats.latency_pct(50):.2f}s"
+                 f"  p95={server.stats.latency_pct(95):.2f}s")
+    print(line)
     print("sample output:", done[0].output[:24].tolist())
 
 

@@ -144,7 +144,9 @@ def make_serve_fn(model: Model, shape: InputShape, arch: str, *,
             jnp.zeros((b, l), jnp.int32), jax.random.PRNGKey(0)
         )
     )
-    bs_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    # per-row block offsets (slots may sit on different blocks when driven
+    # by the continuous-batching scheduler)
+    bs_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
     del tok_struct
     return serve_step, (state_struct, bs_struct), eng
 
@@ -175,7 +177,7 @@ def make_prefill_fn(model: Model, shape: InputShape, arch: str, *,
     state_struct = jax.eval_shape(
         lambda: eng.make_block_state(jnp.zeros((b, l), jnp.int32), jax.random.PRNGKey(0))
     )
-    bs_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    bs_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
     args = (state_struct, bs_struct) + ((enc_struct,) if enc_struct is not None else ())
     return prefill_step, args, eng
 

@@ -430,8 +430,8 @@ class Model:
         if ctx.mode == "prefill" and use_cache:
             updated["ssm"] = captured
             block_len = cj["ssmh"].shape[1]
-            start = ctx.block_start[0]           # same block start across batch
-            updated["ssmh"] = jax.lax.dynamic_slice_in_dim(h, start, block_len, axis=1)
+            cols = ctx.block_start[:, None] + jnp.arange(block_len, dtype=jnp.int32)[None]
+            updated["ssmh"] = jnp.take_along_axis(h, cols[..., None], axis=1)
         return h, updated
 
     # ------------------------------------------------------------------

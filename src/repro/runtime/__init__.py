@@ -1,2 +1,3 @@
-from repro.runtime.request import Request, pad_and_stack  # noqa: F401
+from repro.runtime.request import Request, StreamCallback, pad_and_stack  # noqa: F401
+from repro.runtime.scheduler import SchedulerStats, StreamScheduler  # noqa: F401
 from repro.runtime.server import BatchServer, ServerStats  # noqa: F401

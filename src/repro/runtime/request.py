@@ -3,11 +3,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
 _ids = itertools.count()
+
+# streaming callback: cb(request, block_index, block_tokens [Lb] int32)
+StreamCallback = Callable[["Request", int, np.ndarray], None]
 
 
 @dataclasses.dataclass
@@ -15,9 +18,26 @@ class Request:
     prompt: np.ndarray                     # [P] int32 token ids
     enc_embeds: Optional[np.ndarray] = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
-    # filled by the server
+    stream_cb: Optional[StreamCallback] = None   # per-block streaming hook
+    max_new_tokens: Optional[int] = None   # cap (rounded up to whole blocks);
+                                           # honoured by StreamScheduler only —
+                                           # the lock-step server always runs
+                                           # the full gen_length
+    # filled by the server / scheduler
     output: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+    latency_s: float = 0.0                 # finish - arrival (queueing incl.)
+    arrival_s: float = 0.0                 # set at submit()
+    admit_s: float = 0.0                   # set when a slot is assigned
+    finish_s: float = 0.0                  # set when the last block completes
+
+    @property
+    def service_s(self) -> float:
+        """Time actually resident in a slot (excludes queueing delay)."""
+        return max(self.finish_s - self.admit_s, 0.0)
+
+    def tps(self) -> float:
+        n = 0 if self.output is None else int(self.output.shape[0])
+        return n / self.service_s if self.service_s > 0 else 0.0
 
 
 def pad_and_stack(requests: list[Request], pad_id: int, prompt_len: int) -> np.ndarray:

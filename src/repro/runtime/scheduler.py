@@ -1,0 +1,237 @@
+"""Continuous-batching scheduler over the slot-based engine state.
+
+Unlike the lock-step ``BatchServer`` (all B requests enter and leave
+together), the scheduler drives ``DiffusionEngine.step`` — ONE compiled
+program advancing every resident slot by one denoising iteration — and does
+all control flow host-side:
+
+* **slot admission** from a FIFO queue at block boundaries (the engine keeps
+  slots phase-aligned, so a boundary is the only point where a freshly
+  admitted slot can join the shared prefill/refresh cadence);
+* **slot recycling** the moment a request's last block completes, so a long
+  request never stalls short ones behind it;
+* **per-request streaming** of completed (fully unmasked) blocks through
+  ``Request.stream_cb`` / a scheduler-wide callback;
+* **stats**: per-request latency/TPS and aggregate goodput — completed
+  tokens per wall second, the metric arrival-process serving is judged on.
+
+``drain()`` keeps the offline contract of ``BatchServer`` (submit everything,
+call drain, read ``Request.output``), so existing callers keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import GenerationConfig
+from repro.core.engine import DiffusionEngine
+from repro.models.model import Model
+from repro.runtime.request import Request, StreamCallback
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    completed: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0                  # serving-loop wall: admission + engine.step
+    latencies_s: list = dataclasses.field(default_factory=list)
+
+    @property
+    def goodput(self) -> float:
+        """Completed tokens per wall second (aggregate serving metric)."""
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    # BatchServer.stats compatibility
+    @property
+    def tps(self) -> float:
+        return self.goodput
+
+    @property
+    def requests(self) -> int:
+        return self.completed
+
+    @property
+    def tokens_generated(self) -> int:
+        return self.tokens_out
+
+    def latency_pct(self, pct: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), pct))
+
+
+class StreamScheduler:
+    """Slot-recycling streaming scheduler (continuous batching)."""
+
+    def __init__(
+        self,
+        model: Model,
+        params: dict,
+        gen: GenerationConfig,
+        *,
+        max_slots: int = 8,
+        prompt_len: int = 64,
+        pad_id: int = 0,
+        seed: int = 0,
+        stream_cb: Optional[StreamCallback] = None,
+        clock=time.monotonic,
+        **engine_kw,
+    ):
+        assert gen.gen_length % gen.block_length == 0
+        self.model = model
+        self.params = params
+        self.gen = gen
+        self.max_slots = max_slots
+        self.prompt_len = prompt_len
+        self.pad_id = pad_id
+        self.stream_cb = stream_cb
+        self.clock = clock
+        self.engine = DiffusionEngine(model, gen, **engine_kw)
+        self.n_blocks = gen.gen_length // gen.block_length
+        self.state = self.engine.init_engine_state(
+            max_slots, prompt_len, jax.random.PRNGKey(seed))
+        self.queue: deque[Request] = deque()
+        self.slot_req: list[Optional[Request]] = [None] * max_slots
+        self.slot_streamed: list[int] = [0] * max_slots
+        self.slot_blocks: list[int] = [0] * max_slots   # blocks this request asked for
+        self.stats = SchedulerStats()
+        self._completed: list[Request] = []
+        # modality contract: encoder-conditioned archs need enc_embeds on
+        # every request, others on none — validated at submit() so a mixed
+        # batch can never reach the compute path (BatchServer bug carried
+        # over as an up-front check here).
+        self.expects_enc = bool(model.cfg.n_encoder_layers) or \
+            model.cfg.family in ("audio", "vlm")
+        self._enc_out = None
+        if self.expects_enc:
+            d_enc = model.cfg.d_enc or model.cfg.d_model
+            # encoder outputs are projected to d_model for VLM cross-attn;
+            # device-resident so steady-state steps pay no host->device copy
+            d_out = model.cfg.d_model if model.cfg.family == "vlm" else d_enc
+            self._enc_out = jax.numpy.zeros(
+                (max_slots, model.cfg.n_enc_tokens, d_out), np.float32)
+
+    # ------------------------------------------------------------------
+    # submission / admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        has_enc = req.enc_embeds is not None
+        if has_enc != self.expects_enc:
+            raise ValueError(
+                f"modality mismatch: model "
+                f"{'requires' if self.expects_enc else 'does not accept'} "
+                f"enc_embeds but request {req.request_id} "
+                f"{'omitted' if self.expects_enc else 'supplied'} them"
+            )
+        req.arrival_s = self.clock()
+        self.stats.submitted += 1
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (cycle-boundary only: the engine
+        phase is 0, so the next step prefills the fresh slots' caches)."""
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        st = self.state
+        t_total = self.prompt_len + self.gen.gen_length
+        now = self.clock()
+        lb = self.gen.block_length
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            n_blocks = self.n_blocks
+            if req.max_new_tokens is not None:
+                # whole blocks only: the block loop is the progress quantum
+                n_blocks = min(max(-(-req.max_new_tokens // lb), 1), self.n_blocks)
+            row = np.full((t_total,), self.engine.mask_id, np.int32)
+            row[: self.prompt_len] = self.pad_id
+            p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
+            row[self.prompt_len - len(p): self.prompt_len] = p
+            st = st._replace(
+                tokens=st.tokens.at[slot].set(row),
+                bs=st.bs.at[slot].set(self.prompt_len),
+                blocks_left=st.blocks_left.at[slot].set(n_blocks),
+                iters=st.iters.at[slot].set(0),
+                kv_valid=st.kv_valid.at[slot].set(True),
+                active=st.active.at[slot].set(True),
+            )
+            self.slot_blocks[slot] = n_blocks
+            if self.expects_enc:
+                enc = self.model.encode(
+                    self.params, jax.numpy.asarray(req.enc_embeds)[None],
+                    self.engine.attn_impl)
+                self._enc_out = self._enc_out.at[slot].set(enc[0])
+            req.admit_s = now
+            self.slot_req[slot] = req
+            self.slot_streamed[slot] = 0
+        self.state = st
+
+    # ------------------------------------------------------------------
+    # the serving loop
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def step(self) -> bool:
+        """One engine iteration (+ boundary bookkeeping).  Returns False and
+        does nothing when there is neither queued nor resident work."""
+        t0 = self.clock()           # admission work (incl. encode) is wall time
+        if int(self.state.phase) == 0:
+            self._admit()
+        if not any(r is not None for r in self.slot_req):
+            return False
+        self.state = self.engine.step(self.params, self.state, self._enc_out)
+        jax.block_until_ready(self.state.tokens)
+        self.stats.wall_s += self.clock() - t0
+        if int(self.state.phase) == 0:
+            self._finish_cycle()
+        return True
+
+    def _finish_cycle(self) -> None:
+        """Post-boundary bookkeeping: stream newly completed blocks, retire
+        finished requests, recycle their slots."""
+        tokens = np.asarray(self.state.tokens)
+        blocks_left = np.asarray(self.state.blocks_left)
+        active = np.asarray(self.state.active)
+        lb = self.gen.block_length
+        now = self.clock()
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            done_blocks = self.slot_blocks[slot] - int(blocks_left[slot])
+            for bi in range(self.slot_streamed[slot], done_blocks):
+                blk = tokens[slot, self.prompt_len + bi * lb:
+                             self.prompt_len + (bi + 1) * lb].copy()
+                for cb in (req.stream_cb, self.stream_cb):
+                    if cb is not None:
+                        cb(req, bi, blk)
+            self.slot_streamed[slot] = done_blocks
+            if not active[slot]:
+                n_tok = self.slot_blocks[slot] * lb
+                req.output = tokens[slot, self.prompt_len:
+                                    self.prompt_len + n_tok].copy()
+                req.finish_s = now
+                req.latency_s = now - req.arrival_s
+                self.stats.completed += 1
+                self.stats.tokens_out += n_tok
+                self.stats.latencies_s.append(req.latency_s)
+                self._completed.append(req)
+                self.slot_req[slot] = None
+
+    def drain(self) -> list[Request]:
+        """Offline mode: run until queue and slots are empty (BatchServer
+        compatible — submit everything, drain, read ``Request.output``)."""
+        while self.has_work():
+            self.step()
+        done, self._completed = self._completed, []
+        return done

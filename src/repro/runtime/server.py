@@ -60,18 +60,30 @@ class BatchServer:
         self.queue.append(req)
 
     def step(self) -> list[Request]:
-        """Serve one batch from the queue (pads the tail batch by repetition)."""
+        """Serve one batch from the queue (pads the tail batch by repetition).
+
+        Batches are modality-homogeneous: requests whose ``enc_embeds``
+        presence differs from the queue head are left queued for a later
+        batch, so a mixed batch can never reach ``np.stack``."""
         if not self.queue:
             return []
-        batch = self.queue[: self.batch_size]
-        self.queue = self.queue[self.batch_size:]
+        head_has_enc = self.queue[0].enc_embeds is not None
+        batch: list[Request] = []
+        rest: list[Request] = []
+        for r in self.queue:
+            if len(batch) < self.batch_size and \
+                    (r.enc_embeds is not None) == head_has_enc:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
         real = len(batch)
         while len(batch) < self.batch_size:
             batch.append(batch[-1])
 
         prompts = pad_and_stack(batch, self.pad_id, self.prompt_len)
         enc = None
-        if batch[0].enc_embeds is not None:
+        if head_has_enc:
             enc = np.stack([r.enc_embeds for r in batch])
 
         self.key, sub = jax.random.split(self.key)

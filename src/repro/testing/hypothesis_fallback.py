@@ -1,0 +1,99 @@
+"""Deterministic stand-in for the slice of the ``hypothesis`` API the test
+suite uses, so tier-1 collection never breaks on a container without the
+real package installed.
+
+``tests/conftest.py`` registers this module as ``sys.modules["hypothesis"]``
+ONLY when the real hypothesis is missing; with hypothesis installed (CI pins
+it — see requirements.txt) the shim is never imported.
+
+Supported surface: ``@settings(max_examples=, deadline=)``, ``@given(**kw)``
+with ``strategies.integers / floats / sampled_from``.  Examples are drawn
+from a per-test seeded PRNG (stable across runs) with the strategy bounds
+exercised first — no shrinking, no database, no health checks.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    """draw(rng, i) -> value; ``i`` is the example index so the first draws
+    can pin boundary values deterministically."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random, i: int):
+        return self._draw(rng, i)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    edges = (min_value, max_value)
+
+    def draw(rng, i):
+        if i < len(edges):
+            return edges[i]
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    edges = (min_value, max_value)
+
+    def draw(rng, i):
+        if i < len(edges):
+            return edges[i]
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+
+    def draw(rng, i):
+        if i < len(elements):
+            return elements[i]
+        return rng.choice(elements)
+
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from
+)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            for i in range(n):
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}#{i}")
+                drawn = {k: s.draw(rng, i) for k, s in strategy_kw.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest resolves fixtures from the visible signature: strip the
+        # given-supplied parameters (and the __wrapped__ shortcut back to
+        # the original function) so they are not mistaken for fixtures.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategy_kw
+        ])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

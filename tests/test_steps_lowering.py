@@ -40,7 +40,7 @@ def test_serve_step_lowers(arch, mesh):
     b, l = 2, 128
     state_struct = jax.eval_shape(
         lambda: eng.make_block_state(jnp.zeros((b, l), jnp.int32), jax.random.PRNGKey(0)))
-    bs = jax.ShapeDtypeStruct((), jnp.int32)
+    bs = jax.ShapeDtypeStruct((b,), jnp.int32)   # per-row block offsets
     pstruct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     with mesh:
         lowered = jax.jit(
@@ -62,4 +62,5 @@ def test_train_step_lowers(mesh):
     with mesh:
         lowered = jax.jit(step).lower(state_struct, batch)
     compiled = lowered.compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    from repro.utils.hlo import cost_analysis_dict
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0
