@@ -151,6 +151,43 @@ def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
     return 2 * n_attn * batch * seq * cfg.n_kv_heads * cfg.head_dim * BF16
 
 
+def kv_bytes_per_decode_iter(cfg: ModelConfig, kv_tokens: float, *,
+                             quantized: bool = False) -> float:
+    """HBM bytes of KV rows streamed through flash attention in ONE decode
+    iteration, given the total number of *attended* cache tokens across the
+    batch.
+
+    This is the term the paged layout shrinks: dense serving drags
+    ``slots * (prompt_len + gen_length)`` rows through the kernel every
+    iteration regardless of each request's real extent, while the paged
+    kernel walks only *mapped* pages — ``pages_in_use * page_size`` rows
+    (unmapped block-table entries repeat the garbage page, whose re-fetch
+    the pipeline elides)."""
+    n_attn = sum(1 for l in range(cfg.n_layers)
+                 if cfg.layer_kind(l) in ("attn", "selfcross"))
+    per_row = cfg.n_kv_heads * cfg.head_dim * (1 if quantized else BF16)
+    if quantized:
+        per_row += cfg.n_kv_heads * F32          # dequant scale planes
+    return 2 * n_attn * kv_tokens * per_row
+
+
+def serving_kv_report(cfg: ModelConfig, *, slots_dense: int, t_total: int,
+                      paged_tokens_mean: float, pool_pages: int,
+                      page_size: int, quantized: bool = False) -> dict:
+    """Dense-vs-paged KV traffic + capacity summary for the bench JSON."""
+    dense_iter = kv_bytes_per_decode_iter(
+        cfg, slots_dense * t_total, quantized=quantized)
+    paged_iter = kv_bytes_per_decode_iter(
+        cfg, paged_tokens_mean, quantized=quantized)
+    return {
+        "dense_kv_bytes_per_iter": dense_iter,
+        "paged_kv_bytes_per_iter": paged_iter,
+        "kv_bytes_ratio": dense_iter / max(paged_iter, 1.0),
+        "dense_pool_bytes": kv_cache_bytes(cfg, slots_dense, t_total),
+        "paged_pool_bytes": kv_cache_bytes(cfg, 1, pool_pages * page_size),
+    }
+
+
 # ---------------------------------------------------------------------------
 # step costs
 # ---------------------------------------------------------------------------

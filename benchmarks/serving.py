@@ -16,11 +16,22 @@ a full batch generation before starting.  The scheduler admits at the next
 block boundary and recycles a slot the moment its request's last block
 completes, so goodput counts only requested tokens for both runtimes.
 
+A third run replays the trace through the PAGED scheduler at **2x the slot
+count with the same KV pool bytes** as the dense run: short prompts and
+short requests map only the pages they need, so the free-page allocator
+sustains the doubled slot count, and the costmodel KV-bytes-per-iteration
+term (dense full-cache vs mapped-pages-only) quantifies the HBM win.
+The harness entry (``benchmarks.run``) always writes ``BENCH_serving.json``
+next to the CWD so the perf trajectory accumulates per commit; the CLI
+writes JSON only where ``--json`` points.
+
     PYTHONPATH=src python -m benchmarks.serving [--requests 10] [--load 0.8]
+        [--json BENCH_serving.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -28,12 +39,14 @@ import numpy as np
 from repro.configs import GenerationConfig
 from repro.runtime import BatchServer, Request, StreamScheduler
 
+from benchmarks import costmodel
 from benchmarks.common import build_bench_model, gen_cfg
 
 SLOTS = 4
 PROMPT_LEN = 24
 GEN_LENGTH = 32
 BLOCK_LENGTH = 8
+PAGE_SIZE = 8                   # t_total = 56 -> 7 virtual pages per slot
 REQ_BLOCKS = (1, 2, 4, 1, 2)    # request-length mix, cycled deterministically
 
 
@@ -99,20 +112,42 @@ def _run_lockstep(bm, gcfg: GenerationConfig, reqs, arrivals) -> dict:
             "p95": float(np.percentile(lat, 95)), "makespan": makespan}
 
 
-def _run_stream(bm, gcfg: GenerationConfig, reqs, arrivals) -> dict:
-    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
-                            prompt_len=PROMPT_LEN)
+def _run_stream(bm, gcfg: GenerationConfig, reqs, arrivals, *,
+                max_slots: int = SLOTS, paged: bool = False,
+                kv_pages: int | None = None) -> dict:
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=max_slots,
+                            prompt_len=PROMPT_LEN, paged=paged,
+                            page_size=PAGE_SIZE, kv_pages=kv_pages)
     sched.submit(Request(prompt=reqs[0].prompt))
     sched.drain()
+    pages_total = sched.stats.pages_total
     sched.stats.__init__()
+    sched.stats.pages_total = pages_total
 
-    makespan = _replay(sched.submit, sched.step,
+    page_samples: list[int] = []
+
+    def pump():
+        ran = sched.step()
+        if ran and paged:
+            page_samples.append(sched.stats.pages_in_use)
+        return ran
+
+    makespan = _replay(sched.submit, pump,
                        lambda: not sched.has_work(), arrivals, reqs)
     lat = np.asarray(sched.stats.latencies_s)
     tokens = sched.stats.tokens_out
-    return {"goodput": tokens / makespan, "p50": float(np.percentile(lat, 50)),
-            "p95": float(np.percentile(lat, 95)), "makespan": makespan,
-            "step_traces": sched.engine.step_trace_count}
+    out = {"goodput": tokens / makespan, "p50": float(np.percentile(lat, 50)),
+           "p95": float(np.percentile(lat, 95)), "makespan": makespan,
+           "completed": sched.stats.completed, "slots": max_slots,
+           "step_traces": sched.engine.step_trace_count}
+    if paged:
+        out.update(
+            pages_total=pages_total,
+            peak_pages_in_use=sched.stats.peak_pages_in_use,
+            mean_pages_in_use=float(np.mean(page_samples)) if page_samples else 0.0,
+            page_size=PAGE_SIZE,
+        )
+    return out
 
 
 def _measure_cycle_s(bm, gcfg: GenerationConfig) -> float:
@@ -140,28 +175,63 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
     mean_ia = cycle_s * avg_blocks / (SLOTS * load)
     reqs_a = _mk_requests(bm, n_requests, seed=0)
     reqs_b = _mk_requests(bm, n_requests, seed=0)
+    reqs_c = _mk_requests(bm, n_requests, seed=0)
     arrivals = _poisson_arrivals(n_requests, mean_ia)
     lock = _run_lockstep(bm, gcfg, reqs_a, arrivals)
     stream = _run_stream(bm, gcfg, reqs_b, arrivals)
-    return lock, stream, mean_ia
+    # paged: 2x the slots at the SAME pool bytes as the dense run —
+    # SLOTS dense slots hold SLOTS * t_total rows = SLOTS * n_vpages pages
+    t_total = PROMPT_LEN + GEN_LENGTH
+    n_vp = t_total // PAGE_SIZE
+    paged = _run_stream(bm, gcfg, reqs_c, arrivals, max_slots=2 * SLOTS,
+                        paged=True, kv_pages=SLOTS * n_vp + 1)
+    kv_report = costmodel.serving_kv_report(
+        bm.model.cfg, slots_dense=SLOTS, t_total=t_total,
+        paged_tokens_mean=paged["mean_pages_in_use"] * PAGE_SIZE,
+        pool_pages=SLOTS * n_vp + 1, page_size=PAGE_SIZE)
+    return {"lockstep": lock, "stream": stream, "paged": paged,
+            "kv": kv_report, "mean_interarrival_s": mean_ia}
+
+
+def _write_json(res: dict, path: str) -> None:
+    payload = {
+        "bench": "serving",
+        "config": {"slots": SLOTS, "prompt_len": PROMPT_LEN,
+                   "gen_length": GEN_LENGTH, "block_length": BLOCK_LENGTH,
+                   "page_size": PAGE_SIZE, "req_blocks": list(REQ_BLOCKS)},
+        **res,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
 
 
 def run(rows: list) -> None:
     t0 = time.perf_counter()
-    lock, stream, mean_ia = bench()
+    res = bench()
+    lock, stream, paged, kv = (res["lockstep"], res["stream"], res["paged"],
+                               res["kv"])
     dt = time.perf_counter() - t0
     rows.append((
-        "serving/lockstep", dt * 1e6 / 2,
+        "serving/lockstep", dt * 1e6 / 3,
         f"goodput={lock['goodput']:.2f}tok/s p50={lock['p50']:.2f}s "
         f"p95={lock['p95']:.2f}s",
     ))
     rows.append((
-        "serving/stream", dt * 1e6 / 2,
+        "serving/stream", dt * 1e6 / 3,
         f"goodput={stream['goodput']:.2f}tok/s p50={stream['p50']:.2f}s "
         f"p95={stream['p95']:.2f}s traces={stream['step_traces']} "
         f"goodput_gain={stream['goodput']/max(lock['goodput'],1e-9):.2f}x "
         f"p95_gain={lock['p95']/max(stream['p95'],1e-9):.2f}x",
     ))
+    rows.append((
+        "serving/paged", dt * 1e6 / 3,
+        f"goodput={paged['goodput']:.2f}tok/s p95={paged['p95']:.2f}s "
+        f"slots={paged['slots']} pool_pages={paged['pages_total']} "
+        f"peak_pages={paged['peak_pages_in_use']} "
+        f"traces={paged['step_traces']} "
+        f"kv_bytes_ratio={kv['kv_bytes_ratio']:.2f}x",
+    ))
+    _write_json(res, "BENCH_serving.json")
 
 
 def main() -> None:
@@ -170,16 +240,27 @@ def main() -> None:
     ap.add_argument("--load", type=float, default=0.8,
                     help="offered load fraction of streaming capacity")
     ap.add_argument("--arch", default="llada-8b")
+    ap.add_argument("--json", default=None,
+                    help="write the result dict to this path")
     args = ap.parse_args()
-    lock, stream, mean_ia = bench(args.requests, args.load, args.arch)
-    print(f"poisson mean interarrival: {mean_ia*1e3:.0f} ms")
-    for name, r in (("lock-step", lock), ("stream", stream)):
+    res = bench(args.requests, args.load, args.arch)
+    lock, stream, paged, kv = (res["lockstep"], res["stream"], res["paged"],
+                               res["kv"])
+    print(f"poisson mean interarrival: {res['mean_interarrival_s']*1e3:.0f} ms")
+    for name, r in (("lock-step", lock), ("stream", stream), ("paged", paged)):
         print(f"{name:10s} goodput={r['goodput']:8.2f} tok/s  "
               f"p50={r['p50']:6.2f}s  p95={r['p95']:6.2f}s  "
-              f"makespan={r['makespan']:6.2f}s")
+              f"makespan={r['makespan']:6.2f}s  "
+              f"slots={r.get('slots', SLOTS)}")
     print(f"stream/lock goodput: {stream['goodput']/lock['goodput']:.2f}x   "
           f"p95 latency: {lock['p95']/stream['p95']:.2f}x better   "
           f"engine.step traces: {stream['step_traces']}")
+    print(f"paged: {paged['slots']} slots on {paged['pages_total']} pages "
+          f"(= {SLOTS} dense slots' bytes), peak {paged['peak_pages_in_use']} "
+          f"mean {paged['mean_pages_in_use']:.1f} pages, "
+          f"KV bytes/iter {kv['kv_bytes_ratio']:.2f}x below dense")
+    if args.json:
+        _write_json(res, args.json)
 
 
 if __name__ == "__main__":

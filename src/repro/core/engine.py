@@ -31,6 +31,26 @@ branch index shared by all rows while ``bs`` stays per-row.
 
 The mask token occupies the first padded-vocab slot (id == vocab_size), so it
 is embeddable but never sampled.
+
+Paged KV cache
+--------------
+With ``paged=True`` the self-attention KV caches become ONE pool
+``[G, num_pages, page_size, Hkv, Dh]`` shared by every slot, addressed
+through a per-slot block table ``EngineState.block_tables [B, T/page_size]``
+(-1 = unmapped; page 0 is the reserved garbage page that unmapped reads and
+writes clamp to).  Slot count is thereby decoupled from worst-case sequence
+length: the scheduler admits on page availability, short requests map only
+the pages they need, and per-slot ``prompt_start`` keeps pad prompt rows out
+of attention (``kv_pos < 0``) and out of the pool (pad-only pages are never
+mapped).  The offline ``generate()`` path uses an identity block table, and
+the XLA paged lowering is bit-identical to the dense path, so dense-vs-paged
+greedy outputs agree token for token.
+
+Sampling under continuous batching draws with a per-row key chain
+``fold_in(fold_in(base_key, sample_seed[b]), slot_iters[b])`` — a request's
+stream depends only on its own seed and progress, so sampled generation is
+bit-equal to its offline replay regardless of co-resident traffic, while
+distinct rows (e.g. duplicate prompts) still sample independently.
 """
 from __future__ import annotations
 
@@ -80,6 +100,9 @@ class EngineState(NamedTuple):
     iters: jax.Array         # [B] per-slot lifetime iteration counter
     active: jax.Array        # [B] bool — slot holds a live request
     key: jax.Array
+    prompt_start: jax.Array  # [B] first real (non-pad) prompt position
+    sample_seeds: jax.Array  # [B] per-request sampling seed (folded into key)
+    block_tables: Optional[jax.Array] = None  # [B, T/page_size] paged-KV map
 
 
 def _row_scatter(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -110,6 +133,10 @@ class DiffusionEngine:
         kv_cache_dtype: str | None = None,   # 'int8' => quantized KV cache
         moe_sharding=None,
         inner_sharding=None,
+        paged: bool = False,                 # paged KV pool + block tables
+        page_size: int = 16,                 # tokens per KV page (paged only)
+        kv_pages: int | None = None,         # pool pages incl. garbage page 0;
+                                             # None => dense-equivalent sizing
     ):
         self.model = model
         self.cfg = model.cfg
@@ -125,6 +152,12 @@ class DiffusionEngine:
         self.kv_cache_dtype = kv_cache_dtype
         self.moe_sharding = moe_sharding
         self.inner_sharding = inner_sharding
+        self.paged = paged
+        self.page_size = page_size if paged else 0
+        self.kv_pages = kv_pages
+        if paged:
+            assert gen.mode != "vanilla", "paged KV needs a cached engine mode"
+            assert page_size > 0
         self._jit_run_block = jax.jit(self._run_block)   # compile once, reuse
         self._jit_step = jax.jit(self._engine_step)
         self.step_trace_count = 0   # incremented per trace of _engine_step
@@ -161,6 +194,53 @@ class DiffusionEngine:
         return bs[:, None] + jnp.arange(lb, dtype=jnp.int32)[None]
 
     # ------------------------------------------------------------------
+    # paged-KV + per-row sampling helpers
+    # ------------------------------------------------------------------
+    def _identity_block_tables(self, b: int, t_total: int) -> jax.Array:
+        """Offline layout: slot b owns pages [1 + b*n_vp, 1 + (b+1)*n_vp)."""
+        n_vp = t_total // self.page_size
+        if self.kv_pages is not None:
+            # out-of-range page ids would silently clamp-alias on gather —
+            # an explicitly undersized pool must fail loudly offline
+            assert b * n_vp + 1 <= self.kv_pages, (
+                f"kv_pages={self.kv_pages} cannot hold {b} offline rows of "
+                f"{n_vp} pages (+ garbage page)")
+        return jnp.arange(1, b * n_vp + 1, dtype=jnp.int32).reshape(b, n_vp)
+
+    def _row_args(self, st: BlockState, bs) -> tuple:
+        """Default (iters, seeds, prompt_start, block_tables) for standalone
+        steps (matches the offline ``generate()`` defaults)."""
+        b, t_total = st.tokens.shape
+        iters = jnp.broadcast_to(st.t, (b,)).astype(jnp.int32)
+        seeds = jnp.arange(b, dtype=jnp.int32)
+        prompt_start = jnp.zeros((b,), jnp.int32)
+        bt = self._identity_block_tables(b, t_total) if self.paged else None
+        return iters, seeds, prompt_start, bt
+
+    def _row_keys(self, key: jax.Array, seeds: jax.Array,
+                  iters: jax.Array) -> jax.Array:
+        """[B] per-row draw keys: ``fold_in(fold_in(key, seed), iteration)``.
+
+        The seed decorrelates rows (duplicate prompts must sample different
+        completions); the lifetime iteration advances the chain.  Both are
+        per-REQUEST quantities, so a request's sampling stream is independent
+        of co-resident traffic — bit-equal offline replay under continuous
+        batching."""
+        return jax.vmap(
+            lambda s, i: jax.random.fold_in(jax.random.fold_in(key, s), i)
+        )(seeds, iters)
+
+    def _kv_pos(self, kv_valid, prompt_start) -> jax.Array:
+        """[B, T] cache-validity positions: -1 for sparse-evicted rows and
+        pad prompt rows (pos < prompt_start).  Unmapped virtual pages are
+        masked one level down by ``ops.paged_attention`` (the single owner
+        of the block-table invariant)."""
+        t_total = kv_valid.shape[1]
+        pos = jnp.arange(t_total, dtype=jnp.int32)[None]
+        valid = kv_valid & (pos >= prompt_start[:, None])
+        return jnp.where(valid, pos, -1)
+
+    # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
     def generate(
@@ -169,8 +249,19 @@ class DiffusionEngine:
         prompt: jax.Array,             # [B, P] int32
         key: jax.Array,
         enc_embeds: Optional[jax.Array] = None,
+        *,
+        prompt_start: Optional[jax.Array] = None,   # [B] first real prompt pos
+        sample_seeds: Optional[jax.Array] = None,   # [B] per-row sampling seed
     ) -> jax.Array:
-        """Generate ``gen.gen_length`` tokens after ``prompt``; returns [B, T]."""
+        """Generate ``gen.gen_length`` tokens after ``prompt``; returns [B, T].
+
+        ``key`` is the *base* sampling key: every draw uses
+        ``fold_in(fold_in(key, sample_seeds[b]), row_lifetime_iteration)``.
+        ``sample_seeds`` defaults to the row index (duplicate prompts sample
+        distinct completions); pass a request's serving-time seed to replay
+        its continuous-batching output exactly.  ``prompt_start`` marks
+        per-row pad prefixes to exclude from attention (the serving runtime's
+        variable-length-prompt contract)."""
         gen = self.gen
         b, p = prompt.shape
         lb = gen.block_length
@@ -183,20 +274,28 @@ class DiffusionEngine:
         enc_out = None
         if enc_embeds is not None:
             enc_out = self.model.encode(params, enc_embeds, self.attn_impl)
+        if prompt_start is None:
+            prompt_start = jnp.zeros((b,), jnp.int32)
+        if sample_seeds is None:
+            sample_seeds = jnp.arange(b, dtype=jnp.int32)
 
         for blk in range(n_blocks):
-            key, sub = jax.random.split(key)
             bs = jnp.full((b,), p + blk * lb, jnp.int32)
-            tokens = self._jit_run_block(params, tokens, sub, bs, enc_out)
+            iters0 = jnp.full((b,), blk * gen.resolved_steps(), jnp.int32)
+            tokens = self._jit_run_block(params, tokens, key, bs, iters0,
+                                         sample_seeds, prompt_start, enc_out)
         return tokens
 
     # ------------------------------------------------------------------
     # per-block loop
     # ------------------------------------------------------------------
-    def _run_block(self, params, tokens, key, bs, enc_out):
+    def _run_block(self, params, tokens, key, bs, iters0, seeds, prompt_start,
+                   enc_out):
         gen = self.gen
-        bs = self._bs_rows(bs, tokens.shape[0])
+        b, t_total = tokens.shape
+        bs = self._bs_rows(bs, b)
         state = self.make_block_state(tokens, key)
+        block_tables = self._identity_block_tables(b, t_total) if self.paged else None
         max_steps = gen.resolved_steps() + 1
 
         def cond(st: BlockState):
@@ -205,7 +304,9 @@ class DiffusionEngine:
             return (st.t == 0) | (any_masked & (st.t < max_steps))
 
         def body(st: BlockState):
-            outs = self._iteration_outputs(params, st, bs, enc_out)
+            outs = self._iteration_outputs(
+                params, st, bs, enc_out, iters=iters0 + st.t, seeds=seeds,
+                prompt_start=prompt_start, block_tables=block_tables)
             return self._apply_unmask(st, bs, *outs)
 
         state = jax.lax.while_loop(cond, body, state)
@@ -223,9 +324,10 @@ class DiffusionEngine:
             sel = sel & active[:, None]
         new_blk = jnp.where(sel, pred, blk_tok)
         new_tokens = _row_scatter(st.tokens, new_blk, cols)
-        key_next, _ = jax.random.split(st.key)
+        # the base key is never split: draws use fold_in(key, row_iteration),
+        # which continuous batching reproduces per slot for bit-equal replay
         return BlockState(new_tokens, caches, conf, pred, hidden,
-                          kv_valid, st.t + 1, key_next)
+                          kv_valid, st.t + 1, st.key)
 
     # ------------------------------------------------------------------
     # standalone steps (serving runtime & multi-pod dry-run)
@@ -233,8 +335,16 @@ class DiffusionEngine:
     def make_block_state(self, tokens: jax.Array, key: jax.Array) -> BlockState:
         b, t_total = tokens.shape
         lb = self.gen.block_length
+        kv_pages = 0
+        if self.paged:
+            assert t_total % self.page_size == 0, (
+                f"page_size {self.page_size} must divide the sequence {t_total}")
+            # default pool: dense-equivalent (+ the reserved garbage page 0);
+            # the serving scheduler passes a smaller kv_pages to oversubscribe
+            kv_pages = self.kv_pages or b * (t_total // self.page_size) + 1
         caches = () if self.gen.mode == "vanilla" else self.model.init_cache(
-            b, t_total, lb, kv_dtype=self.kv_cache_dtype)
+            b, t_total, lb, kv_dtype=self.kv_cache_dtype,
+            kv_pages=kv_pages, page_size=self.page_size)
         return BlockState(
             tokens=tokens, caches=caches,
             conf=jnp.zeros((b, lb), jnp.float32),
@@ -249,30 +359,43 @@ class DiffusionEngine:
         """ONE steady-state ES iteration (paper Alg. 1): the op the decode
         dry-run shapes lower.  Refresh iterations lower via prefill()."""
         bs = self._bs_rows(bs, st.tokens.shape[0])
-        out = self._decode_step(params, bs, st, skip=True)
+        iters, seeds, prompt_start, bt = self._row_args(st, bs)
+        out = self._decode_step(params, bs, iters, seeds, prompt_start, bt,
+                                st, skip=True)
         return self._apply_unmask(st, bs, *out)
 
     def prefill(self, params, st: BlockState, bs, enc_out=None) -> BlockState:
         """Cache initialization / prompt refresh as a standalone step."""
         bs = self._bs_rows(bs, st.tokens.shape[0])
-        out = self._prefill_step(params, bs, enc_out, st)
+        iters, seeds, prompt_start, bt = self._row_args(st, bs)
+        out = self._prefill_step(params, bs, iters, seeds, prompt_start, bt,
+                                 enc_out, st)
         return self._apply_unmask(st, bs, *out)
 
-    def _iteration_outputs(self, params, st: BlockState, bs, enc_out):
+    def _iteration_outputs(self, params, st: BlockState, bs, enc_out, *,
+                           iters, seeds, prompt_start, block_tables):
         """Branch-dispatched compute for ONE denoising iteration at phase
         ``st.t`` — shared by the offline block loop and the serving step so
         the prefill/refresh/skip cadence can never diverge between them.
+        ``iters`` [B] is the per-row lifetime iteration and ``seeds`` [B] the
+        per-request sampling seed (together: the draw-key index);
+        ``prompt_start`` [B] masks pad prompt rows; ``block_tables`` routes
+        the paged KV pool (None = dense).
         Returns ``(caches, conf, pred, hidden, kv_valid)``."""
         if self.gen.mode == "vanilla":
-            conf, pred, st = self._vanilla_compute(params, st, bs, enc_out)
+            conf, pred, st = self._vanilla_compute(params, st, bs, enc_out,
+                                                   iters, seeds)
             return st.caches, conf, pred, st.hidden, st.kv_valid
         branch = self._branch_index(st.t)
         return jax.lax.switch(
             branch,
             [
-                functools.partial(self._decode_step, params, bs, skip=True),
-                functools.partial(self._decode_step, params, bs, skip=False),
-                functools.partial(self._prefill_step, params, bs, enc_out),
+                functools.partial(self._decode_step, params, bs, iters, seeds,
+                                  prompt_start, block_tables, skip=True),
+                functools.partial(self._decode_step, params, bs, iters, seeds,
+                                  prompt_start, block_tables, skip=False),
+                functools.partial(self._prefill_step, params, bs, iters, seeds,
+                                  prompt_start, block_tables, enc_out),
             ],
             st,
         )
@@ -302,6 +425,12 @@ class DiffusionEngine:
         t_total = prompt_len + self.gen.gen_length
         tokens = jnp.full((batch, t_total), self.mask_id, jnp.int32)
         bst = self.make_block_state(tokens, key)
+        block_tables = None
+        if self.paged:
+            # all slots start unmapped; the scheduler installs page mappings
+            # at admission and clears them when the slot retires
+            block_tables = jnp.full(
+                (batch, t_total // self.page_size), -1, jnp.int32)
         return EngineState(
             tokens=bst.tokens, caches=bst.caches, conf=bst.conf, pred=bst.pred,
             hidden=bst.hidden, kv_valid=bst.kv_valid,
@@ -311,6 +440,9 @@ class DiffusionEngine:
             iters=jnp.zeros((batch,), jnp.int32),
             active=jnp.zeros((batch,), bool),
             key=bst.key,
+            prompt_start=jnp.zeros((batch,), jnp.int32),
+            sample_seeds=jnp.zeros((batch,), jnp.int32),
+            block_tables=block_tables,
         )
 
     def step(self, params, state: EngineState,
@@ -328,7 +460,10 @@ class DiffusionEngine:
         bs = state.bs
         st = BlockState(state.tokens, state.caches, state.conf, state.pred,
                         state.hidden, state.kv_valid, state.phase, state.key)
-        outs = self._iteration_outputs(params, st, bs, enc_out)
+        outs = self._iteration_outputs(
+            params, st, bs, enc_out, iters=state.iters,
+            seeds=state.sample_seeds,
+            prompt_start=state.prompt_start, block_tables=state.block_tables)
         st = self._apply_unmask(st, bs, *outs, active=state.active)
 
         phase = (state.phase + 1) % steps_pb
@@ -351,6 +486,9 @@ class DiffusionEngine:
             hidden=st.hidden, kv_valid=st.kv_valid,
             bs=new_bs, blocks_left=blocks_left, phase=phase,
             iters=iters, active=active, key=st.key,
+            prompt_start=state.prompt_start,
+            sample_seeds=state.sample_seeds,
+            block_tables=state.block_tables,
         )
 
     # ------------------------------------------------------------------
@@ -368,24 +506,35 @@ class DiffusionEngine:
             inner_sharding=self.inner_sharding, **kw,
         )
 
-    def _prefill_step(self, params, bs, enc_out, st: BlockState):
+    def _prefill_step(self, params, bs, iters, seeds, prompt_start,
+                      block_tables, enc_out, st: BlockState):
         """Full forward over the whole sequence: (re)builds every cache and
         the block's confidence/prediction/indicator caches (cache init &
-        prompt refresh — paper §5.2 last paragraph)."""
+        prompt refresh — paper §5.2 last paragraph).
+
+        Pad prompt rows (pos < prompt_start) are computed but masked out of
+        every attention read (``kv_pos < 0``) and — in paged mode — never
+        mapped, so they cost no pool pages; their scatters land on the
+        garbage page."""
         model, gen = self.model, self.gen
         b, t_total = st.tokens.shape
         cols = self._block_cols(bs)
 
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
+        # zeroing the WHOLE pool is correct in paged mode too: the prefill
+        # cadence is phase-aligned, so every resident slot rebuilds its pages
+        # in this same pass (idle slots write only the garbage page)
         caches = jax.tree_util.tree_map(jnp.zeros_like, st.caches)
         if self.cache_shardings is not None:
             caches = jax.tree_util.tree_map(
                 jax.lax.with_sharding_constraint, caches, self.cache_shardings
             )
+        kv_pos = self._kv_pos(jnp.ones((b, t_total), bool), prompt_start)
         ctx = self._ctx(
-            "prefill", pos, kv_pos=pos, slot_idx=pos,
+            "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
             block_start=bs, enc_out=enc_out,
+            block_tables=block_tables, page_size=self.page_size,
         )
         hidden = []
         for seg in self.segments:
@@ -395,14 +544,16 @@ class DiffusionEngine:
             if seg.keep_k is not None:
                 hidden.append(_row_gather(h, cols).astype(jnp.float32))
         logits_blk = model.logits(params, _row_gather(h, cols))
-        conf, pred = self._confidence(st, bs, logits_blk)
+        conf, pred = self._confidence(st, bs, logits_blk, iters, seeds)
 
         kv_valid = jnp.ones((b, t_total), bool)
         if gen.sparse_attention:
-            kv_valid = self._sparse_evict(params, caches, hidden, bs, st.tokens)
+            kv_valid = self._sparse_evict(params, caches, hidden, bs,
+                                          st.tokens, prompt_start, block_tables)
         return caches, conf, pred, tuple(hidden), kv_valid
 
-    def _decode_step(self, params, bs, st: BlockState, *, skip: bool):
+    def _decode_step(self, params, bs, iters, seeds, prompt_start,
+                     block_tables, st: BlockState, *, skip: bool):
         """One diffusion iteration on the current block (paper Alg. 1).
 
         ``skip=True`` applies the early-skip schedule; ``skip=False`` is the
@@ -414,9 +565,7 @@ class DiffusionEngine:
         blk_tok = _row_gather(st.tokens, self._block_cols(bs))
         h = model.embed(params, blk_tok)
         s_idx = jnp.broadcast_to(jnp.arange(lb, dtype=jnp.int32)[None], (b, lb))
-        kv_pos = jnp.where(
-            st.kv_valid, jnp.arange(t_total, dtype=jnp.int32)[None], -1
-        )
+        kv_pos = self._kv_pos(st.kv_valid, prompt_start)
         caches = st.caches
         hidden = list(st.hidden)
         conf_cache = st.conf
@@ -425,6 +574,7 @@ class DiffusionEngine:
             ctx = self._ctx(
                 "decode", bs[:, None] + s_idx, kv_pos=kv_pos,
                 slot_idx=bs[:, None] + s_idx, block_idx=s_idx,
+                block_tables=block_tables, page_size=self.page_size,
             )
             out = model.run_layers(params, h, ctx, caches,
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)
@@ -444,46 +594,57 @@ class DiffusionEngine:
                     h = jnp.take_along_axis(h, sel[..., None], axis=1)
 
         logits = model.logits(params, h)                       # [B, |S|, V]
-        key, sub = jax.random.split(st.key)
+        row_keys = self._row_keys(st.key, seeds, iters)
         conf_new, pred_new = smp.confidence_and_pred(
-            sub, logits, gen, self.cfg.vocab_size, self.mask_id
+            row_keys, logits, gen, self.cfg.vocab_size, self.mask_id
         )
         conf = _row_scatter(st.conf, conf_new, s_idx)
         pred = _row_scatter(st.pred, pred_new, s_idx)
         return caches, conf, pred, tuple(hidden), st.kv_valid
 
-    def _vanilla_compute(self, params, st: BlockState, bs, enc_out):
+    def _vanilla_compute(self, params, st: BlockState, bs, enc_out,
+                         iters=None, seeds=None):
         """Full-sequence forward, no caches (the original LLaDA loop)."""
         model = self.model
         b, t_total = st.tokens.shape
         bs = self._bs_rows(bs, b)
+        if iters is None:   # standalone probes (benchmarks) draw at phase t
+            iters = jnp.broadcast_to(st.t, (b,)).astype(jnp.int32)
+        if seeds is None:
+            seeds = jnp.arange(b, dtype=jnp.int32)
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
         ctx = self._ctx("nocache", pos, enc_out=enc_out)
         out = model.run_layers(params, h, ctx, None)
         logits_blk = model.logits(params, _row_gather(out.h, self._block_cols(bs)))
-        conf, pred = self._confidence(st, bs, logits_blk)
+        conf, pred = self._confidence(st, bs, logits_blk, iters, seeds)
         return conf, pred, st
 
     # ------------------------------------------------------------------
-    def _confidence(self, st: BlockState, bs, logits_blk):
+    def _confidence(self, st: BlockState, bs, logits_blk, iters, seeds):
         if self.disallow_eos:
             blk_tok = _row_gather(st.tokens, self._block_cols(bs))
             rev = jnp.flip(jnp.cumsum(jnp.flip(blk_tok == self.mask_id, 1), 1), 1)
             mask_after = (rev - (blk_tok == self.mask_id)) > 0
             logits_blk = smp.disallow_premature_eos(logits_blk, mask_after, self.eos_id)
-        key, sub = jax.random.split(st.key)
+        row_keys = self._row_keys(st.key, seeds, iters)
         return smp.confidence_and_pred(
-            sub, logits_blk, self.gen, self.cfg.vocab_size, self.mask_id
+            row_keys, logits_blk, self.gen, self.cfg.vocab_size, self.mask_id
         )
 
     # ------------------------------------------------------------------
     # Sparse-dLLM-style cache eviction (App. C.3.2 integration)
     # ------------------------------------------------------------------
-    def _sparse_evict(self, params, caches, hidden, bs, tokens):
+    def _sparse_evict(self, params, caches, hidden, bs, tokens,
+                      prompt_start=None, block_tables=None):
         """Score out-of-block cache rows by the attention they receive from
         the current block's queries at the first skip-stage layer; retain the
-        top ``sparse_retention`` fraction (kernel-size mean pooling)."""
+        top ``sparse_retention`` fraction (kernel-size mean pooling).
+
+        Positions the block can never attend — pad prompt rows and unmapped
+        virtual pages (whose gathered K rows are garbage-page content) — are
+        masked out of the probe softmax and ranked below everything, so they
+        neither soak up attention mass nor win retention slots."""
         gen, cfg = self.gen, self.cfg
         b, t_total = tokens.shape
         lb = gen.block_length
@@ -501,7 +662,14 @@ class DiffusionEngine:
         q_pos = self._block_cols(bs)
         q = apply_rope(q, q_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
 
-        kcache = caches["kv"]["0"].k[g]            # [B, T, Hkv, Dh]
+        kcache = caches["kv"]["0"].k[g]            # [B, T, Hkv, Dh] (dense)
+        col = jnp.arange(t_total, dtype=jnp.int32)[None]
+        attendable = jnp.ones((b, t_total), bool)
+        if prompt_start is not None:
+            attendable &= col >= prompt_start[:, None]
+        if block_tables is not None:               # paged: pool -> dense view
+            kcache = ops.gather_pages(kcache, block_tables)
+            attendable &= jnp.repeat(block_tables >= 0, self.page_size, axis=1)
         group = cfg.n_heads // cfg.n_kv_heads
         kk = jnp.repeat(jnp.swapaxes(kcache, 1, 2), group, axis=1)   # [B, Hq, T, Dh]
         scores = jnp.einsum(
@@ -509,6 +677,7 @@ class DiffusionEngine:
             jnp.swapaxes(q, 1, 2).astype(jnp.float32),
             kk.astype(jnp.float32),
         ) / (cfg.head_dim ** 0.5)
+        scores = jnp.where(attendable[:, None, None, :], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)            # [B, H, Lb, T]
         recv = jnp.mean(probs, axis=(1, 2))                # [B, T]
         # kernel-size mean pooling over neighbours
@@ -520,9 +689,9 @@ class DiffusionEngine:
             pooled = jnp.mean(
                 jnp.stack([padded[:, i:i + t_total] for i in range(ks)], -1), -1
             )
-        col = jnp.arange(t_total)[None]
         in_block = (col >= bs[:, None]) & (col < (bs + lb)[:, None])
-        cand = jnp.where(in_block, jnp.inf, pooled)
+        cand = jnp.where(in_block, jnp.inf,
+                         jnp.where(attendable, pooled, -jnp.inf))
         n_keep = int(gen.sparse_retention * (t_total - lb)) + lb
         kth = jnp.sort(cand, axis=-1)[:, -n_keep][:, None]
         return (cand >= kth) | in_block

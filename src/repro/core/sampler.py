@@ -23,14 +23,20 @@ def _mask_invalid_vocab(logits: jax.Array, vocab_size: int, mask_id: int) -> jax
 
 
 def confidence_and_pred(
-    key: jax.Array,
+    key: jax.Array,             # PRNG key [2], or per-row key chain [B, 2]
     logits: jax.Array,          # [B, K, V]
     gen: GenerationConfig,
     vocab_size: int,
     mask_id: int,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (conf [B, K] — the probability of the chosen token — and
-    pred [B, K] — the chosen token)."""
+    pred [B, K] — the chosen token).
+
+    ``key`` may be a single PRNG key (shared draw across the batch) or a
+    per-row ``[B, 2]`` key chain — the engines derive row keys as
+    ``fold_in(base_key, slot_iters[b])`` so a request's sampling stream
+    depends only on its *own* progress, making sampled generation under
+    continuous batching bit-equal to its offline replay."""
     logits = _mask_invalid_vocab(logits.astype(jnp.float32), vocab_size, mask_id)
 
     if gen.temperature <= 0.0:
@@ -51,7 +57,11 @@ def confidence_and_pred(
         cutoff_idx = jnp.sum(cum < gen.top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         filtered = jnp.where(filtered < cutoff, NEG_INF, filtered)
-    pred = jax.random.categorical(key, filtered, axis=-1)
+    if key.ndim == 2:           # [B, 2] per-row keys: row b draws with key[b]
+        pred = jax.vmap(lambda kb, lb: jax.random.categorical(kb, lb, axis=-1))(
+            key, filtered)
+    else:
+        pred = jax.random.categorical(key, filtered, axis=-1)
     probs = jax.nn.softmax(logits, axis=-1)
     conf = jnp.take_along_axis(probs, pred[..., None], axis=-1)[..., 0]
     return conf, pred.astype(jnp.int32)

@@ -15,6 +15,18 @@ Mask semantics are position-based so gathered Q subsets work naturally:
 
 Block shapes are MXU/VPU aligned: head_dim padded to a multiple of 128 by the
 ops.py wrapper, block_q/block_kv multiples of 8 (f32) with 128-lane tiles.
+
+Paged variant
+-------------
+``paged_flash_attention_kernel`` attends a *shared* KV pool
+``[num_pages, Hkv, page_size, D]`` through a per-slot block table
+``[B, n_vpages]``: the innermost (sequential) grid dimension walks the slot's
+virtual pages and the K/V BlockSpec ``index_map`` resolves each one to its
+physical page via scalar prefetch (the same trick scatter_kv.py uses for
+output routing).  Unmapped entries (block table < 0) clamp to the reserved
+garbage page 0 and are masked out through ``kv_pos < 0``; because the
+index_map then repeats the same physical block, the Pallas pipeline elides
+the redundant DMA — HBM traffic is proportional to *mapped* pages only.
 """
 from __future__ import annotations
 
@@ -146,3 +158,84 @@ def flash_attention_kernel(
         ],
         interpret=interpret,
     )(q_pos, kv_pos, q, k, v)
+
+
+def paged_flash_attention_kernel(
+    q: jax.Array,             # [B, Hq, Lq, D]     (Lq % block_q == 0, D % 128 == 0)
+    k_pool: jax.Array,        # [P, Hkv, ps, D]    shared page pool
+    v_pool: jax.Array,
+    q_pos: jax.Array,         # [B, Lq] int32
+    kv_pos: jax.Array,        # [B, n_vpages * ps] int32 (-1 = masked)
+    block_tables: jax.Array,  # [B, n_vpages] int32 physical page ids, -1 unmapped
+    *,
+    window: int = 0,
+    anchor: int = 0,
+    causal: bool = False,
+    softmax_scale: float,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention over a block-table-addressed KV page pool.
+
+    One grid step per (batch, head, q-tile, virtual page); the K/V
+    ``index_map`` reads the prefetched block table to DMA the physical page.
+    The kernel body is the dense ``_flash_kernel`` — only the routing differs.
+    """
+    b, hq, lq, d = q.shape
+    num_pages, hkv, ps, dk = k_pool.shape
+    group = hq // hkv
+    n_vpages = block_tables.shape[1]
+    assert dk == d and lq % block_q == 0 and kv_pos.shape[1] == n_vpages * ps
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=softmax_scale,
+        window=window,
+        anchor=anchor,
+        causal=causal,
+        n_kv_blocks=n_vpages,
+    )
+
+    def _page(bi, h, qi, ki, bt):
+        # unmapped entries clamp to the garbage page 0 (reads are masked via
+        # kv_pos < 0); repeated indices let the pipeline skip the re-fetch
+        return jnp.maximum(bt[bi, ki], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, lq // block_q, n_vpages),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, h, qi, ki, bt: (bi, qi)),
+            pl.BlockSpec((1, ps), lambda bi, h, qi, ki, bt: (bi, ki)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, h, qi, ki, bt: (bi, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, ps, d),
+                lambda bi, h, qi, ki, bt: (_page(bi, h, qi, ki, bt), h // group, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, ps, d),
+                lambda bi, h, qi, ki, bt: (_page(bi, h, qi, ki, bt), h // group, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, h, qi, ki, bt: (bi, h, qi, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+    # scalar-prefetch arg order: the kernel body ignores the leading bt ref
+    def body(bt_ref, qpos_ref, kvpos_ref, q_ref, k_ref, v_ref, o_ref,
+             acc_ref, m_ref, l_ref):
+        del bt_ref
+        kernel(qpos_ref, kvpos_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref)
+
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q_pos, kv_pos, q, k_pool, v_pool)

@@ -19,9 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention import (
+    flash_attention_kernel,
+    paged_flash_attention_kernel,
+)
 from repro.kernels.importance import importance_kernel
-from repro.kernels.scatter_kv import scatter_kv_kernel
+from repro.kernels.scatter_kv import paged_scatter_kv_kernel, scatter_kv_kernel
 from repro.kernels.ssd_scan import ssd_chunk_kernel
 
 Impl = Literal["xla", "pallas"]
@@ -205,6 +208,120 @@ def _attention_xla_chunked(q, k, v, q_pos, kv_pos, *, window, anchor, causal,
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (block-table-addressed KV pool)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(
+    pool: jax.Array,          # [P, ps, ...] shared page pool
+    block_tables: jax.Array,  # [B, n_vpages] int32 page ids, -1 unmapped
+) -> jax.Array:
+    """Materialize the per-slot dense view ``[B, n_vpages * ps, ...]``.
+
+    Unmapped virtual pages read the garbage page 0 — callers must mask those
+    positions (``kv_pos < 0``) before the values can matter.
+    """
+    p, ps = pool.shape[:2]
+    b, n_vp = block_tables.shape
+    flat = pool.reshape((p * ps,) + pool.shape[2:])
+    base = jnp.maximum(block_tables, 0)[..., None] * ps + jnp.arange(ps, dtype=jnp.int32)
+    return jnp.take(flat, base.reshape(b, n_vp * ps), axis=0)
+
+
+def paged_kv_mask(block_tables: jax.Array, kv_pos: jax.Array, page_size: int) -> jax.Array:
+    """Force kv_pos to -1 wherever the virtual page is unmapped."""
+    mapped = jnp.repeat(block_tables >= 0, page_size, axis=1)
+    return jnp.where(mapped, kv_pos, -1)
+
+
+def paged_attention(
+    q: jax.Array,             # [B, Hq, Lq, D]
+    k_pool: jax.Array,        # [P, ps, Hkv, D] shared page pool
+    v_pool: jax.Array,
+    q_pos: jax.Array,         # [B, Lq] int32
+    kv_pos: jax.Array,        # [B, n_vpages * ps] int32 (-1 = invalid)
+    block_tables: jax.Array,  # [B, n_vpages] int32 page ids, -1 unmapped
+    *,
+    page_size: int,
+    window=0,
+    anchor: int = 0,
+    causal: bool = False,
+    softmax_scale: float | None = None,
+    impl: Impl = "xla",
+    block_q: int = 128,
+    kv_chunk: int = 1024,
+    k_scale: jax.Array | None = None,   # [P, ps, Hkv]: int8 KV dequant scales
+    v_scale: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Rectangular GQA attention over a paged KV pool.
+
+    The virtual KV address space is ``n_vpages * page_size`` sequence
+    positions; ``block_tables`` maps each slot's virtual page to a physical
+    pool page.  Math is identical to :func:`attention` on the gathered dense
+    cache — the XLA path literally lowers to that (bit-comparable on CPU),
+    the Pallas path walks the block table in the kernel grid so only mapped
+    pages move through HBM.
+    """
+    d = q.shape[-1]
+    ps = page_size
+    assert k_pool.shape[1] == ps and block_tables.shape[1] * ps == kv_pos.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (d**0.5)
+    kv_pos = paged_kv_mask(block_tables, kv_pos.astype(jnp.int32), ps)
+    if impl == "pallas":
+        assert isinstance(window, int), "pallas path needs a static window"
+        assert k_scale is None, "int8 KV dequant: XLA path only (for now)"
+        return _paged_attention_pallas(
+            q, k_pool, v_pool, q_pos, kv_pos, block_tables,
+            window=window, anchor=anchor, causal=causal, scale=scale,
+            block_q=block_q,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+    # XLA mirror: gather the mapped pages into the per-slot dense layout and
+    # reuse the chunked online-softmax lowering — identical math to the dense
+    # path, so dense-vs-paged stays bit-comparable in CPU tests.
+    k_d = jnp.swapaxes(gather_pages(k_pool, block_tables), 1, 2)   # [B, Hkv, T, D]
+    v_d = jnp.swapaxes(gather_pages(v_pool, block_tables), 1, 2)
+    ks = vs = None
+    if k_scale is not None:
+        ks = jnp.swapaxes(gather_pages(k_scale, block_tables), 1, 2)  # [B, Hkv, T]
+        vs = jnp.swapaxes(gather_pages(v_scale, block_tables), 1, 2)
+    else:
+        k_d = k_d.astype(q.dtype)
+        v_d = v_d.astype(q.dtype)
+    return _attention_xla_chunked(
+        q, k_d, v_d, q_pos, kv_pos,
+        window=window, anchor=anchor, causal=causal, scale=scale,
+        kv_chunk=kv_chunk, k_scale=ks, v_scale=vs,
+    )
+
+
+def _paged_attention_pallas(q, k_pool, v_pool, q_pos, kv_pos, block_tables, *,
+                            window, anchor, causal, scale, block_q, interpret):
+    b, hq, lq, d = q.shape
+    ps = k_pool.shape[1]
+    assert ps % 8 == 0, "page_size must be a multiple of 8 for the TPU kernel"
+    bq = min(block_q, _round_up(lq, 8))
+    lq_p = _round_up(lq, bq)
+    d_p = _round_up(d, 128)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_p - lq), (0, d_p - d)))
+    # pool layout for the kernel: [P, Hkv, ps, D]
+    kp = jnp.pad(jnp.swapaxes(k_pool, 1, 2), ((0, 0), (0, 0), (0, 0), (0, d_p - d)))
+    vp = jnp.pad(jnp.swapaxes(v_pool, 1, 2), ((0, 0), (0, 0), (0, 0), (0, d_p - d)))
+    qpos_p = jnp.pad(q_pos, ((0, 0), (0, lq_p - lq)))
+
+    out = paged_flash_attention_kernel(
+        qp, kp.astype(qp.dtype), vp.astype(qp.dtype),
+        qpos_p.astype(jnp.int32), kv_pos.astype(jnp.int32),
+        block_tables.astype(jnp.int32),
+        window=window, anchor=anchor, causal=causal, softmax_scale=scale,
+        block_q=bq, interpret=interpret,
+    )
+    return out[:, :, :lq, :d]
+
+
+# ---------------------------------------------------------------------------
 # SSD (Mamba-2)
 # ---------------------------------------------------------------------------
 
@@ -350,6 +467,39 @@ def scatter_rows(
     ).reshape(cache.shape)
 
 
+def scatter_rows_paged(
+    pool: jax.Array,          # [P, ps, ...] shared page pool
+    new: jax.Array,           # [B, K, ...]
+    idx: jax.Array,           # [B, K] int32 absolute sequence positions
+    block_tables: jax.Array,  # [B, n_vpages] int32 page ids, -1 unmapped
+    *,
+    page_size: int,
+    impl: Impl = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """pool[bt[b, idx//ps], idx%ps] = new[b, k] (block-table row scatter).
+
+    Rows whose virtual page is unmapped (bt < 0) land on the reserved garbage
+    page 0 — never read back because readers mask ``kv_pos < 0`` there."""
+    ps = page_size
+    assert pool.shape[1] == ps
+    if impl == "pallas":
+        shape = pool.shape
+        p4 = pool.reshape(shape[0], shape[1], 1, -1) if pool.ndim != 4 else pool
+        n4 = new.reshape(new.shape[0], new.shape[1], 1, -1) if new.ndim != 4 else new
+        out = paged_scatter_kv_kernel(
+            p4, n4.astype(p4.dtype), idx, block_tables,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+        return out.reshape(shape)
+    b, k = idx.shape
+    page = jnp.take_along_axis(block_tables, idx // ps, axis=1)       # [B, K]
+    dest = jnp.maximum(page, 0) * ps + idx % ps                       # flat pool rows
+    flat = pool.reshape((pool.shape[0] * ps, -1))
+    upd = new.reshape(b * k, -1).astype(flat.dtype)
+    return flat.at[dest.reshape(-1)].set(upd).reshape(pool.shape)
+
+
 # ---------------------------------------------------------------------------
 # Importance score (Eq. 1)
 # ---------------------------------------------------------------------------
@@ -375,7 +525,11 @@ def importance_score(
 
 __all__ = [
     "attention",
+    "paged_attention",
+    "gather_pages",
+    "paged_kv_mask",
     "ssd",
     "scatter_rows",
+    "scatter_rows_paged",
     "importance_score",
 ]

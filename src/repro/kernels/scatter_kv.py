@@ -6,6 +6,10 @@ so we use scalar prefetch: the index array is available before the grid runs
 and drives the *output* BlockSpec index_map — each grid step DMAs one fresh
 [H, D] row directly onto its target cache row.  ``input_output_aliases``
 makes the update truly in place on TPU (the cache never round-trips HBM).
+
+The paged variant routes through a per-slot block table on top of the same
+trick: destination = (physical page, in-page offset) computed from TWO
+prefetched scalar arrays (row indices + block table).
 """
 from __future__ import annotations
 
@@ -46,3 +50,47 @@ def scatter_kv_kernel(
         input_output_aliases={2: 0},   # cache (arg index incl. scalar prefetch) -> out
         interpret=interpret,
     )(idx.astype(jnp.int32), new, cache)
+
+
+def _paged_scatter_kernel(idx_ref, bt_ref, new_ref, pool_ref, out_ref):
+    del idx_ref, bt_ref, pool_ref  # routing happens in the out index_map
+    out_ref[...] = new_ref[...].astype(out_ref.dtype)
+
+
+def paged_scatter_kv_kernel(
+    pool: jax.Array,          # [P, ps, H, D] shared page pool
+    new: jax.Array,           # [B, K, H, D]
+    idx: jax.Array,           # [B, K] int32 absolute sequence positions
+    block_tables: jax.Array,  # [B, n_vpages] int32, -1 unmapped
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter fresh K/V rows through the block table: row (b, k) lands on
+    physical page ``bt[b, idx[b,k] // ps]`` at in-page offset ``idx % ps``.
+    Rows of slots with no mapping (bt < 0) are routed to the reserved garbage
+    page 0, so idle serving slots can scatter unconditionally."""
+    p, ps, h, d = pool.shape
+    b, k = idx.shape
+
+    def _dest(bi, ki, idx, bt):
+        pos = idx[bi, ki]
+        return jnp.maximum(bt[bi, pos // ps], 0), pos % ps
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda bi, ki, idx, bt: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, h, d), lambda bi, ki, idx, bt: _dest(bi, ki, idx, bt) + (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, h, d), lambda bi, ki, idx, bt: _dest(bi, ki, idx, bt) + (0, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _paged_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},   # pool (arg index incl. scalar prefetch) -> out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), block_tables.astype(jnp.int32), new, pool)

@@ -37,6 +37,11 @@ def main() -> None:
     ap.add_argument("--parallel-decoding", action="store_true")
     ap.add_argument("--stream-print", action="store_true",
                     help="print each request's blocks as they unmask")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool + block tables (stream runtime only)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="pool pages incl. garbage page (default: dense-equivalent)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -62,7 +67,9 @@ def main() -> None:
 
     if args.runtime == "stream":
         server = StreamScheduler(model, params, gen, max_slots=args.batch,
-                                 prompt_len=args.prompt_len, stream_cb=stream_cb)
+                                 prompt_len=args.prompt_len, stream_cb=stream_cb,
+                                 paged=args.paged, page_size=args.page_size,
+                                 kv_pages=args.kv_pages)
     else:
         server = BatchServer(model, params, gen, batch_size=args.batch,
                              prompt_len=args.prompt_len)
@@ -79,6 +86,9 @@ def main() -> None:
     if args.runtime == "stream":
         line += (f"  p50={server.stats.latency_pct(50):.2f}s"
                  f"  p95={server.stats.latency_pct(95):.2f}s")
+        if args.paged:
+            line += (f"  peak_pages={server.stats.peak_pages_in_use}"
+                     f"/{server.stats.pages_total}")
     print(line)
     print("sample output:", done[0].output[:24].tolist())
 

@@ -106,11 +106,17 @@ def _engine_for(model: Model, shape: InputShape, gen: GenerationConfig,
     cache_shardings = None
     if mesh is not None:
         from repro.sharding.specs import cache_pspecs, shardings_of
+        # dense layout here (paged=False): the dry-run engines are dense.
+        # A paged engine MUST derive specs with cache_pspecs(..., paged=True)
+        # — pool leaves [G, P, ps, H, D] are rank-5 like dense KV, and the
+        # dense rule would shard the page dim over 'data', aliasing pages
+        # across hosts while any slot's block table may reference any page.
         cache_struct = jax.eval_shape(
             lambda: model.init_cache(shape.global_batch, shape.seq_len,
                                      gen.block_length, kv_dtype=kv_dtype)
         )
-        cache_shardings = shardings_of(cache_pspecs(cache_struct, mesh), mesh)
+        cache_shardings = shardings_of(
+            cache_pspecs(cache_struct, mesh, paged=False), mesh)
     moe_sharding = None
     inner_sharding = None
     if mesh is not None:

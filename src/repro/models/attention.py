@@ -19,7 +19,11 @@ from repro.models.common import apply_rope, dense_init
 
 class KVCache(NamedTuple):
     """KV cache rows; optionally int8-quantized with per-(token, head) scales
-    (beyond-paper memory optimization, EXPERIMENTS §Perf)."""
+    (beyond-paper memory optimization, EXPERIMENTS §Perf).
+
+    Layouts: dense ``[B, S, Hkv, Dh]`` (one stripe per slot), or — when used
+    as the pool of a :class:`PagedKVCache` — ``[P, page_size, Hkv, Dh]``
+    shared across all slots and addressed through a block table."""
     k: jax.Array                        # [B, S, Hkv, Dh] (bf16/f32 or int8)
     v: jax.Array
     k_scale: Optional[jax.Array] = None  # [B, S, Hkv] f32 when quantized
@@ -28,6 +32,25 @@ class KVCache(NamedTuple):
     @property
     def quantized(self) -> bool:
         return self.k_scale is not None
+
+
+class PagedKVCache(NamedTuple):
+    """Block-table view over a shared KV page pool.
+
+    ``cache`` holds pool-shaped arrays ``[num_pages, page_size, Hkv, Dh]``
+    (plus ``[num_pages, page_size, Hkv]`` scale planes when quantized);
+    ``block_tables[b, vp]`` maps slot ``b``'s virtual page ``vp`` (sequence
+    positions ``[vp*ps, (vp+1)*ps)``) to a physical page, with ``-1`` for
+    unmapped pages (masked on read, routed to the garbage page 0 on write).
+    ``page_size`` is static — it parameterizes kernel grids, not data.
+    """
+    cache: KVCache
+    block_tables: jax.Array              # [B, n_vpages] int32
+    page_size: int
+
+    @property
+    def quantized(self) -> bool:
+        return self.cache.quantized
 
 
 def _quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -83,7 +106,7 @@ def self_attention(
     x: jax.Array,                  # [B, K, d] active rows
     positions: jax.Array,          # [B, K] global positions
     *,
-    cache: Optional[KVCache] = None,
+    cache: Optional[KVCache | PagedKVCache] = None,
     slot_idx: Optional[jax.Array] = None,   # [B, K] cache rows to scatter
     kv_pos: Optional[jax.Array] = None,     # [B, S] cache validity (-1 invalid)
     causal: bool = False,
@@ -91,10 +114,17 @@ def self_attention(
     anchor: int = 0,
     attn_impl: str = "xla",
     use_rope: bool = True,
-) -> tuple[jax.Array, Optional[KVCache]]:
+) -> tuple[jax.Array, Optional[KVCache | PagedKVCache]]:
     """Returns (output [B, K, d], updated cache or None)."""
     b, k, _ = x.shape
     q, kk, vv = _project_qkv(params, cfg, x, positions, rope=use_rope)
+
+    if isinstance(cache, PagedKVCache):
+        assert slot_idx is not None and kv_pos is not None
+        return _paged_self_attention(
+            params, q, kk, vv, cache, positions, slot_idx, kv_pos,
+            causal=causal, window=window, anchor=anchor, attn_impl=attn_impl,
+        )
 
     k_scale = v_scale = None
     if cache is not None:
@@ -135,6 +165,44 @@ def self_attention(
     )
     out = jnp.swapaxes(out, 1, 2).reshape(b, k, -1)
     return out @ params["wo"], cache
+
+
+def _paged_self_attention(
+    params, q, kk, vv, cache: PagedKVCache, positions, slot_idx, kv_pos,
+    *, causal, window, anchor, attn_impl,
+) -> tuple[jax.Array, PagedKVCache]:
+    """Scatter fresh rows through the block table, attend the page pool."""
+    b, k = slot_idx.shape
+    pool, bt, ps = cache.cache, cache.block_tables, cache.page_size
+    if pool.quantized:
+        k8, ks = _quantize_rows(kk)
+        v8, vs = _quantize_rows(vv)
+        pool = KVCache(
+            ops.scatter_rows_paged(pool.k, k8, slot_idx, bt, page_size=ps),
+            ops.scatter_rows_paged(pool.v, v8, slot_idx, bt, page_size=ps),
+            ops.scatter_rows_paged(pool.k_scale, ks, slot_idx, bt, page_size=ps),
+            ops.scatter_rows_paged(pool.v_scale, vs, slot_idx, bt, page_size=ps),
+        )
+        k_scale, v_scale = pool.k_scale, pool.v_scale
+    else:
+        k_scale = v_scale = None
+        pool = KVCache(
+            ops.scatter_rows_paged(pool.k, kk.astype(pool.k.dtype), slot_idx,
+                                   bt, page_size=ps),
+            ops.scatter_rows_paged(pool.v, vv.astype(pool.v.dtype), slot_idx,
+                                   bt, page_size=ps),
+        )
+    out = ops.paged_attention(
+        jnp.swapaxes(q, 1, 2),
+        pool.k, pool.v,
+        positions, kv_pos, bt,
+        page_size=ps,
+        causal=causal, window=window, anchor=anchor,
+        impl=attn_impl,
+        k_scale=k_scale, v_scale=v_scale,
+    )
+    out = jnp.swapaxes(out, 1, 2).reshape(b, k, -1)
+    return out @ params["wo"], PagedKVCache(pool, bt, ps)
 
 
 def cross_attention(

@@ -33,7 +33,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import common
-from repro.models.attention import KVCache, attn_init, cross_attention, self_attention
+from repro.models.attention import (
+    KVCache,
+    PagedKVCache,
+    attn_init,
+    cross_attention,
+    self_attention,
+)
 from repro.models.common import (
     BIG_WINDOW,
     dense_init,
@@ -60,6 +66,8 @@ class ForwardCtx:
     slot_idx: Optional[jax.Array] = None      # [B, K] cache rows to scatter
     block_idx: Optional[jax.Array] = None     # [B, K] block-local indices (ssm rejoin)
     block_start: Optional[jax.Array] = None   # [B] dynamic block start (prefill)
+    block_tables: Optional[jax.Array] = None  # [B, n_vpages] paged-KV page map
+    page_size: int = 0                        # static; > 0 => KV caches are paged
     enc_out: Optional[jax.Array] = None       # [B, E, d_enc]
     causal: bool = False
     window_override: int = 0                  # long-context windowed variant
@@ -167,18 +175,29 @@ class Model:
     # caches
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, seq_len: int, block_len: int,
-                   kv_dtype: str | None = None) -> dict:
+                   kv_dtype: str | None = None, *,
+                   kv_pages: int | None = None, page_size: int = 0) -> dict:
         """Zeroed cache pytree; arrays are stacked [G, B, ...] per position j.
 
         ``kv_dtype='int8'`` allocates quantized self-attention KV rows with
-        per-(token, head) f32 scales (beyond-paper memory optimization)."""
+        per-(token, head) f32 scales (beyond-paper memory optimization).
+
+        ``kv_pages``/``page_size`` switch self-attention KV to the paged pool
+        layout ``[G, num_pages, page_size, Hkv, Dh]`` shared by all slots and
+        addressed through ``ForwardCtx.block_tables`` (page 0 is the reserved
+        garbage page).  Cross-attention and SSM caches stay per-slot dense —
+        they are O(block) or O(enc) per slot, not O(sequence)."""
         cfg = self.cfg
         g = self.n_groups
         caches: dict[str, dict[str, Any]] = {"kv": {}, "cross": {}, "ssm": {}, "ssmh": {}}
         for j, (kind, _) in enumerate(self.layer_info):
             sj = str(j)
             if kind in ("attn", "selfcross"):
-                shape = (g, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+                if kv_pages:
+                    assert page_size > 0 and seq_len % page_size == 0
+                    shape = (g, kv_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+                else:
+                    shape = (g, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
                 if kv_dtype == "int8":
                     caches["kv"][sj] = KVCache(
                         jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
@@ -359,14 +378,19 @@ class Model:
         use_cache = cj is not None
 
         if kind in ("attn", "selfcross"):
+            kv_cache = cj["kv"] if use_cache else None
+            if kv_cache is not None and ctx.block_tables is not None:
+                kv_cache = PagedKVCache(kv_cache, ctx.block_tables, ctx.page_size)
             a, new_kv = self_attention(
                 lp["attn"], cfg, rms_norm(h, lp["ln1"], cfg.rms_eps), ctx.positions,
-                cache=cj["kv"] if use_cache else None,
+                cache=kv_cache,
                 slot_idx=ctx.slot_idx, kv_pos=ctx.kv_pos,
                 causal=ctx.causal, window=window, anchor=ctx.anchor,
                 attn_impl=ctx.attn_impl,
             )
             h = h + a
+            if isinstance(new_kv, PagedKVCache):
+                new_kv = new_kv.cache    # store the pool; the table is ctx state
             updated["kv"] = new_kv
 
         if kind in ("cross", "selfcross"):

@@ -1,3 +1,7 @@
 from repro.runtime.request import Request, StreamCallback, pad_and_stack  # noqa: F401
-from repro.runtime.scheduler import SchedulerStats, StreamScheduler  # noqa: F401
+from repro.runtime.scheduler import (  # noqa: F401
+    PageAllocator,
+    SchedulerStats,
+    StreamScheduler,
+)
 from repro.runtime.server import BatchServer, ServerStats  # noqa: F401

@@ -23,6 +23,13 @@ class Request:
                                            # honoured by StreamScheduler only —
                                            # the lock-step server always runs
                                            # the full gen_length
+    sample_seed: Optional[int] = None      # per-request sampling seed (fold_in
+                                           # index); defaults to request_id —
+                                           # replay offline via
+                                           # generate(sample_seeds=[seed])
+                                           # (paged + max_new_tokens: replay
+                                           # with the truncated gen_length —
+                                           # see StreamScheduler._pages_needed)
     # filled by the server / scheduler
     output: Optional[np.ndarray] = None
     latency_s: float = 0.0                 # finish - arrival (queueing incl.)

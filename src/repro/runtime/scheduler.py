@@ -13,7 +13,15 @@ all control flow host-side:
 * **per-request streaming** of completed (fully unmasked) blocks through
   ``Request.stream_cb`` / a scheduler-wide callback;
 * **stats**: per-request latency/TPS and aggregate goodput — completed
-  tokens per wall second, the metric arrival-process serving is judged on.
+  tokens per wall second, the metric arrival-process serving is judged on;
+
+* **paged KV admission** (``paged=True``): the engine's KV caches are ONE
+  page pool shared by all slots; a free-page allocator gates admission on
+  page availability computed from each request's *actual* prompt length and
+  requested blocks (not the padded worst case), maps the pages into the
+  slot's block-table row, and returns them the moment the request retires.
+  Slot count is thereby decoupled from worst-case sequence length: a pool
+  sized for N dense slots can serve 2N+ mixed-length slots.
 
 ``drain()`` keeps the offline contract of ``BatchServer`` (submit everything,
 call drain, read ``Request.output``), so existing callers keep working.
@@ -41,11 +49,23 @@ class SchedulerStats:
     tokens_out: int = 0
     wall_s: float = 0.0                  # serving-loop wall: admission + engine.step
     latencies_s: list = dataclasses.field(default_factory=list)
+    # paged-KV gauges (0 / static in dense mode)
+    pages_in_use: int = 0                # currently mapped pool pages
+    pages_total: int = 0                 # allocatable pages (excl. garbage page)
+    peak_pages_in_use: int = 0
 
     @property
     def goodput(self) -> float:
         """Completed tokens per wall second (aggregate serving metric)."""
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    def gauges(self) -> dict:
+        """Point-in-time gauge snapshot (the monitoring-surface dict)."""
+        return {
+            "pages_in_use": self.pages_in_use,
+            "pages_total": self.pages_total,
+            "peak_pages_in_use": self.peak_pages_in_use,
+        }
 
     # BatchServer.stats compatibility
     @property
@@ -66,6 +86,35 @@ class SchedulerStats:
         return float(np.percentile(np.asarray(self.latencies_s), pct))
 
 
+class PageAllocator:
+    """Host-side free-list over the shared KV pool.
+
+    Page 0 is the reserved garbage page (unmapped block-table entries clamp
+    to it) and is never handed out; pages 1..num_pages-1 are allocatable.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "pool needs the garbage page + >=1 real page"
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low ids first
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: list[int]) -> None:
+        self._free.extend(pages)
+
+
 class StreamScheduler:
     """Slot-recycling streaming scheduler (continuous batching)."""
 
@@ -81,6 +130,9 @@ class StreamScheduler:
         seed: int = 0,
         stream_cb: Optional[StreamCallback] = None,
         clock=time.monotonic,
+        paged: bool = False,
+        page_size: int = 16,
+        kv_pages: Optional[int] = None,     # None => dense-equivalent pool
         **engine_kw,
     ):
         assert gen.gen_length % gen.block_length == 0
@@ -92,6 +144,20 @@ class StreamScheduler:
         self.pad_id = pad_id
         self.stream_cb = stream_cb
         self.clock = clock
+        self.paged = paged
+        self.page_size = page_size
+        t_total = prompt_len + gen.gen_length
+        self.allocator: Optional[PageAllocator] = None
+        if paged:
+            assert t_total % page_size == 0, (
+                f"page_size {page_size} must divide prompt+gen {t_total}")
+            n_vp = t_total // page_size
+            if kv_pages is None:
+                kv_pages = max_slots * n_vp + 1
+            assert kv_pages > n_vp, (
+                "pool too small: a full-length request could never be admitted")
+            engine_kw.update(paged=True, page_size=page_size, kv_pages=kv_pages)
+            self.allocator = PageAllocator(kv_pages)
         self.engine = DiffusionEngine(model, gen, **engine_kw)
         self.n_blocks = gen.gen_length // gen.block_length
         self.state = self.engine.init_engine_state(
@@ -100,7 +166,10 @@ class StreamScheduler:
         self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.slot_streamed: list[int] = [0] * max_slots
         self.slot_blocks: list[int] = [0] * max_slots   # blocks this request asked for
+        self.slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
         self.stats = SchedulerStats()
+        if self.allocator is not None:
+            self.stats.pages_total = self.allocator.num_pages - 1
         self._completed: list[Request] = []
         # modality contract: encoder-conditioned archs need enc_embeds on
         # every request, others on none — validated at submit() so a mixed
@@ -136,9 +205,35 @@ class StreamScheduler:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def _pages_needed(self, prompt_tokens: int, n_blocks: int) -> tuple[int, int, int]:
+        """(first_vp, last_vp, count) of virtual pages a request must map.
+
+        Accounting uses the request's ACTUAL prompt length: pad rows below
+        ``prompt_start`` are attention-masked, so whole pad-only pages are
+        simply never mapped — short prompts and short (max_new_tokens)
+        requests both cost fewer pool pages than the padded worst case.
+
+        Note the semantics this buys: a paged ``max_new_tokens`` request
+        never maps (so never attends) the mask-token region beyond its last
+        block — it decodes exactly like an offline run with
+        ``gen_length = n_blocks * block_length``.  Dense serving instead
+        attends the full padded tail, so short-request outputs differ
+        between the two layouts by design (full-length requests are
+        bit-identical).  Offline replay of a short paged request therefore
+        uses the truncated ``gen_length``, not the scheduler's."""
+        ps = self.page_size
+        start = self.prompt_len - prompt_tokens          # prompt_start
+        first_vp = start // ps
+        last_vp = -(-(self.prompt_len + n_blocks * self.gen.block_length) // ps)
+        return first_vp, last_vp, last_vp - first_vp
+
     def _admit(self) -> None:
         """Fill free slots from the queue (cycle-boundary only: the engine
-        phase is 0, so the next step prefills the fresh slots' caches)."""
+        phase is 0, so the next step prefills the fresh slots' caches).
+
+        In paged mode admission is additionally page-availability-gated:
+        the queue head waits (FIFO, no overtaking) until retirements return
+        enough pages."""
         free = self._free_slots()
         if not free or not self.queue:
             return
@@ -147,15 +242,23 @@ class StreamScheduler:
         now = self.clock()
         lb = self.gen.block_length
         while free and self.queue:
-            slot = free.pop(0)
-            req = self.queue.popleft()
+            req = self.queue[0]
             n_blocks = self.n_blocks
             if req.max_new_tokens is not None:
                 # whole blocks only: the block loop is the progress quantum
                 n_blocks = min(max(-(-req.max_new_tokens // lb), 1), self.n_blocks)
+            p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
+            pages: list[int] = []
+            if self.allocator is not None:
+                first_vp, last_vp, need = self._pages_needed(len(p), n_blocks)
+                got = self.allocator.alloc(need)
+                if got is None:
+                    break                       # page-gated: retry next cycle
+                pages = got
+            slot = free.pop(0)
+            self.queue.popleft()
             row = np.full((t_total,), self.engine.mask_id, np.int32)
             row[: self.prompt_len] = self.pad_id
-            p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
             row[self.prompt_len - len(p): self.prompt_len] = p
             st = st._replace(
                 tokens=st.tokens.at[slot].set(row),
@@ -164,7 +267,21 @@ class StreamScheduler:
                 iters=st.iters.at[slot].set(0),
                 kv_valid=st.kv_valid.at[slot].set(True),
                 active=st.active.at[slot].set(True),
+                prompt_start=st.prompt_start.at[slot].set(
+                    self.prompt_len - len(p) if self.paged else 0),
+                sample_seeds=st.sample_seeds.at[slot].set(
+                    req.sample_seed if req.sample_seed is not None
+                    else req.request_id),
             )
+            if self.allocator is not None:
+                bt_row = np.full((t_total // self.page_size,), -1, np.int32)
+                bt_row[first_vp:last_vp] = pages
+                st = st._replace(
+                    block_tables=st.block_tables.at[slot].set(bt_row))
+                self.slot_pages[slot] = pages
+                self.stats.pages_in_use = self.allocator.used_pages
+                self.stats.peak_pages_in_use = max(
+                    self.stats.peak_pages_in_use, self.stats.pages_in_use)
             self.slot_blocks[slot] = n_blocks
             if self.expects_enc:
                 enc = self.model.encode(
@@ -227,6 +344,15 @@ class StreamScheduler:
                 self.stats.latencies_s.append(req.latency_s)
                 self._completed.append(req)
                 self.slot_req[slot] = None
+                if self.allocator is not None and self.slot_pages[slot]:
+                    # return pages immediately and unmap the slot's row —
+                    # a freed page may be re-issued next cycle, and a stale
+                    # mapping would let the idle slot scribble on it
+                    self.allocator.free(self.slot_pages[slot])
+                    self.slot_pages[slot] = []
+                    self.state = self.state._replace(
+                        block_tables=self.state.block_tables.at[slot].set(-1))
+                    self.stats.pages_in_use = self.allocator.used_pages
 
     def drain(self) -> list[Request]:
         """Offline mode: run until queue and slots are empty (BatchServer

@@ -15,6 +15,8 @@ Rules (dim sharded only when divisible — guarded everywhere):
   batch    tokens (B, L): B -> (pod, data)
   caches   KV [G,B,S,H,D]: B -> data when divisible; H -> model when divisible
            else S -> model; if B == 1 (long-context) S -> (data, model)
+           paged KV pools [G,P,ps,H,D]: H -> model only (pages replicated —
+           any slot's block table may reference any page)
   acts     training/prefill sequence-parallel: h [B, L, d] constrained to
            L -> model between layer blocks (Megatron sequence parallelism)
 """
@@ -126,9 +128,22 @@ def seq_parallel_spec(mesh: Mesh) -> P:
 # ---------------------------------------------------------------------------
 
 
-def cache_leaf_spec(kind: str, shape: tuple, mesh: Mesh) -> P:
-    """kind in {'kv', 'cross', 'ssm', 'ssmh'}; shapes carry a leading group dim."""
+def cache_leaf_spec(kind: str, shape: tuple, mesh: Mesh, *,
+                    paged: bool = False) -> P:
+    """kind in {'kv', 'cross', 'ssm', 'ssmh'}; shapes carry a leading group dim.
+
+    ``paged=True``: self-attention KV leaves are page pools
+    [G, P, ps, H, D] (+ scale planes [G, P, ps, H]) shared by every slot —
+    there is no batch dim to put on 'data', and any slot's block table may
+    reference any page, so pages stay replicated across 'data' and only the
+    head dim is TP-sharded."""
     dmodel = mesh_axis_size(mesh, "model")
+    if paged and kind == "kv":
+        if len(shape) == 5:                  # pool [G, P, ps, H, D]
+            return _guard((None, None, None, "model", None), shape, mesh)
+        if len(shape) == 4:                  # int8 scales [G, P, ps, H]
+            return _guard((None, None, None, "model"), shape, mesh)
+        return P()
     if kind == "ssmh":                       # [G, B, Lb, d]
         return _guard((None, "data", None, "model"), shape, mesh)
     if kind == "ssm":
@@ -155,21 +170,22 @@ def cache_leaf_spec(kind: str, shape: tuple, mesh: Mesh) -> P:
     return P()
 
 
-def cache_pspecs(caches: Any, mesh: Mesh) -> Any:
+def cache_pspecs(caches: Any, mesh: Mesh, *, paged: bool = False) -> Any:
     def rule(path: str, leaf) -> P:
         kind = path.split("/")[0]
-        return cache_leaf_spec(kind, leaf.shape, mesh)
+        return cache_leaf_spec(kind, leaf.shape, mesh, paged=paged)
 
     return tree_map_with_path_str(rule, caches)
 
 
-def block_state_pspecs(state: Any, mesh: Mesh) -> Any:
+def block_state_pspecs(state: Any, mesh: Mesh, *, paged: bool = False) -> Any:
     """Specs for core.engine.BlockState (serve/prefill dry-run)."""
     from repro.core.engine import BlockState
 
     return BlockState(
         tokens=batch_spec(state.tokens.shape, mesh),
-        caches=cache_pspecs(state.caches, mesh) if state.caches != () else (),
+        caches=cache_pspecs(state.caches, mesh, paged=paged)
+        if state.caches != () else (),
         conf=batch_spec(state.conf.shape, mesh),
         pred=batch_spec(state.pred.shape, mesh),
         hidden=tuple(
