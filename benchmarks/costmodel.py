@@ -188,6 +188,30 @@ def serving_kv_report(cfg: ModelConfig, *, slots_dense: int, t_total: int,
     }
 
 
+def prefix_sharing_report(cfg: ModelConfig, *, pool_pages: int,
+                          page_size: int, req_pages: int,
+                          shared_pages: int) -> dict:
+    """Analytic admitted-concurrency bound for a duplicate-prefix burst.
+
+    Unshared, every request costs ``req_pages``; with prefix sharing the
+    cohort owner pays ``req_pages`` once and every follower only its private
+    ``req_pages - shared_pages``.  The ratio of the two bounds is the
+    capacity headroom CoW sharing buys at EQUAL pool bytes — the number the
+    serving benchmark's measured ``resident_peak`` should approach."""
+    private = req_pages - shared_pages
+    unshared = pool_pages // req_pages
+    shared = 0 if pool_pages < req_pages else \
+        1 + (pool_pages - req_pages) // max(private, 1)
+    page_bytes = kv_cache_bytes(cfg, 1, page_size)
+    return {
+        "bound_unshared": unshared,
+        "bound_shared": shared,
+        "bound_gain": shared / max(unshared, 1),
+        "page_bytes": page_bytes,
+        "bytes_saved_per_follower": shared_pages * page_bytes,
+    }
+
+
 # ---------------------------------------------------------------------------
 # step costs
 # ---------------------------------------------------------------------------

@@ -21,9 +21,21 @@ count with the same KV pool bytes** as the dense run: short prompts and
 short requests map only the pages they need, so the free-page allocator
 sustains the doubled slot count, and the costmodel KV-bytes-per-iteration
 term (dense full-cache vs mapped-pages-only) quantifies the HBM win.
+
+A fourth pair of runs measures **copy-on-write prefix page sharing** on a
+duplicate-prefix burst (the memory manager v2 headline): the same burst of
+identical greedy requests is driven through the paged scheduler at EQUAL
+pool bytes with sharing off and on.  With sharing, only the cohort owner
+pays the prompt pages; every follower maps them read-only (refcounted) and
+allocates just its private generation pages, so the admitted concurrency
+(``resident_peak``) rises >= 1.5x and the outputs stay bit-identical —
+identical rows write identical bytes, so shared scatters are idempotent.
+The costmodel's ``prefix_sharing_report`` gives the analytic concurrency
+bound the measurement should approach.
+
 The harness entry (``benchmarks.run``) always writes ``BENCH_serving.json``
-next to the CWD so the perf trajectory accumulates per commit; the CLI
-writes JSON only where ``--json`` points.
+next to the CWD so the perf trajectory accumulates per commit (the README
+documents every field); the CLI writes JSON only where ``--json`` points.
 
     PYTHONPATH=src python -m benchmarks.serving [--requests 10] [--load 0.8]
         [--json BENCH_serving.json]
@@ -48,6 +60,7 @@ GEN_LENGTH = 32
 BLOCK_LENGTH = 8
 PAGE_SIZE = 8                   # t_total = 56 -> 7 virtual pages per slot
 REQ_BLOCKS = (1, 2, 4, 1, 2)    # request-length mix, cycled deterministically
+DUP_REQUESTS = 8                # duplicate-prefix burst size (sharing run)
 
 
 def _mk_requests(bm, n: int, seed: int = 0) -> list[Request]:
@@ -150,6 +163,44 @@ def _run_stream(bm, gcfg: GenerationConfig, reqs, arrivals, *,
     return out
 
 
+def _run_dup_prefix(bm, gcfg: GenerationConfig, *, sharing: bool) -> dict:
+    """Burst of identical greedy 1-block requests at a pool sized for TWO
+    unshared requests: admitted concurrency is purely page-gated, so the
+    resident_peak delta is exactly what CoW prefix sharing buys."""
+    rng = np.random.default_rng(42)
+    vocab = bm.model.cfg.vocab_size
+    prompt = rng.integers(3, vocab, PROMPT_LEN).astype(np.int32)
+    n_vp_req = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
+    kv_pages = 2 * n_vp_req + 1
+    sched = StreamScheduler(bm.model, bm.params, gcfg,
+                            max_slots=DUP_REQUESTS, prompt_len=PROMPT_LEN,
+                            paged=True, page_size=PAGE_SIZE,
+                            kv_pages=kv_pages, prefix_sharing=sharing)
+    sched.submit(Request(prompt=prompt.copy(),
+                         max_new_tokens=BLOCK_LENGTH))       # warm compile
+    sched.drain()
+    sched.stats.__init__()
+    sched.stats.pages_total = kv_pages - 1
+    reqs = [Request(prompt=prompt.copy(), max_new_tokens=BLOCK_LENGTH)
+            for _ in range(DUP_REQUESTS)]
+    t0 = time.monotonic()
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
+    makespan = time.monotonic() - t0
+    assert len(done) == DUP_REQUESTS
+    return {
+        "sharing": sharing,
+        "goodput": sched.stats.tokens_out / makespan,
+        "makespan": makespan,
+        "admitted_concurrency": sched.stats.resident_peak,
+        "pages_total": sched.stats.pages_total,
+        "peak_pages_in_use": sched.stats.peak_pages_in_use,
+        "cow_forks": sched.stats.cow_forks,
+        "outputs": [r.output.tolist() for r in done],
+    }
+
+
 def _measure_cycle_s(bm, gcfg: GenerationConfig) -> float:
     """Wall time of one warmed block cycle of the streaming engine."""
     sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
@@ -189,8 +240,27 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
         bm.model.cfg, slots_dense=SLOTS, t_total=t_total,
         paged_tokens_mean=paged["mean_pages_in_use"] * PAGE_SIZE,
         pool_pages=SLOTS * n_vp + 1, page_size=PAGE_SIZE)
+    # duplicate-prefix burst: sharing off vs on at EQUAL pool bytes
+    dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
+    dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
+    # plain raise, not assert: the acceptance gate must survive python -O,
+    # and the pops keep raw token dumps out of the JSON either way
+    if dup_base.pop("outputs") != dup_shared.pop("outputs"):
+        raise RuntimeError(
+            "prefix sharing changed greedy outputs (must be bit-identical)")
+    n_vp_req = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
+    dup = {
+        "baseline": dup_base,
+        "shared": dup_shared,
+        "outputs_bit_identical": True,
+        "concurrency_gain": dup_shared["admitted_concurrency"]
+        / max(dup_base["admitted_concurrency"], 1),
+        "bound": costmodel.prefix_sharing_report(
+            bm.model.cfg, pool_pages=2 * n_vp_req, page_size=PAGE_SIZE,
+            req_pages=n_vp_req, shared_pages=PROMPT_LEN // PAGE_SIZE),
+    }
     return {"lockstep": lock, "stream": stream, "paged": paged,
-            "kv": kv_report, "mean_interarrival_s": mean_ia}
+            "dup_prefix": dup, "kv": kv_report, "mean_interarrival_s": mean_ia}
 
 
 def _write_json(res: dict, path: str) -> None:
@@ -198,7 +268,8 @@ def _write_json(res: dict, path: str) -> None:
         "bench": "serving",
         "config": {"slots": SLOTS, "prompt_len": PROMPT_LEN,
                    "gen_length": GEN_LENGTH, "block_length": BLOCK_LENGTH,
-                   "page_size": PAGE_SIZE, "req_blocks": list(REQ_BLOCKS)},
+                   "page_size": PAGE_SIZE, "req_blocks": list(REQ_BLOCKS),
+                   "dup_requests": DUP_REQUESTS},
         **res,
     }
     with open(path, "w") as f:
@@ -212,24 +283,33 @@ def run(rows: list) -> None:
                                res["kv"])
     dt = time.perf_counter() - t0
     rows.append((
-        "serving/lockstep", dt * 1e6 / 3,
+        "serving/lockstep", dt * 1e6 / 4,
         f"goodput={lock['goodput']:.2f}tok/s p50={lock['p50']:.2f}s "
         f"p95={lock['p95']:.2f}s",
     ))
     rows.append((
-        "serving/stream", dt * 1e6 / 3,
+        "serving/stream", dt * 1e6 / 4,
         f"goodput={stream['goodput']:.2f}tok/s p50={stream['p50']:.2f}s "
         f"p95={stream['p95']:.2f}s traces={stream['step_traces']} "
         f"goodput_gain={stream['goodput']/max(lock['goodput'],1e-9):.2f}x "
         f"p95_gain={lock['p95']/max(stream['p95'],1e-9):.2f}x",
     ))
     rows.append((
-        "serving/paged", dt * 1e6 / 3,
+        "serving/paged", dt * 1e6 / 4,
         f"goodput={paged['goodput']:.2f}tok/s p95={paged['p95']:.2f}s "
         f"slots={paged['slots']} pool_pages={paged['pages_total']} "
         f"peak_pages={paged['peak_pages_in_use']} "
         f"traces={paged['step_traces']} "
         f"kv_bytes_ratio={kv['kv_bytes_ratio']:.2f}x",
+    ))
+    dup = res["dup_prefix"]
+    rows.append((
+        "serving/dup_prefix", dt * 1e6 / 4,
+        f"concurrency={dup['baseline']['admitted_concurrency']}->"
+        f"{dup['shared']['admitted_concurrency']} "
+        f"({dup['concurrency_gain']:.2f}x, bound "
+        f"{dup['bound']['bound_gain']:.2f}x) at equal pool bytes, "
+        f"outputs bit-identical",
     ))
     _write_json(res, "BENCH_serving.json")
 
@@ -259,6 +339,14 @@ def main() -> None:
           f"(= {SLOTS} dense slots' bytes), peak {paged['peak_pages_in_use']} "
           f"mean {paged['mean_pages_in_use']:.1f} pages, "
           f"KV bytes/iter {kv['kv_bytes_ratio']:.2f}x below dense")
+    dup = res["dup_prefix"]
+    print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal pool "
+          f"bytes): admitted concurrency "
+          f"{dup['baseline']['admitted_concurrency']} -> "
+          f"{dup['shared']['admitted_concurrency']} "
+          f"({dup['concurrency_gain']:.2f}x measured, "
+          f"{dup['bound']['bound_gain']:.2f}x analytic bound), "
+          f"outputs bit-identical")
     if args.json:
         _write_json(res, args.json)
 

@@ -46,6 +46,21 @@ mapped).  The offline ``generate()`` path uses an identity block table, and
 the XLA paged lowering is bit-identical to the dense path, so dense-vs-paged
 greedy outputs agree token for token.
 
+Memory manager v2 hooks (docs/ARCHITECTURE.md has the full contract):
+
+* **Sticky sparse eviction** — ``kv_valid`` is carried across refreshes and
+  blocks (serving already did; ``generate()`` threads it through the block
+  loop), and a prompt/block refresh can only *shrink* the retained set
+  outside the current block: ``kv_valid' = evict(...) & (kv_valid |
+  in_block)``.  Evicted rows are dead for the rest of the request, which is
+  what lets the scheduler return fully-dead *pages* to the free list
+  (``dead_page_report``) instead of leaving them masked-but-resident — an
+  unmapped page and a masked row are indistinguishable to every reader.
+* **Copy-on-write fork** — ``fork_pages`` copies physical pages inside every
+  KV pool plane (``ops.fork_pages``); the scheduler calls it right before a
+  refresh would scatter diverged content into a page shared by more than one
+  slot (refcount > 1 ⇒ read-only).
+
 Sampling under continuous batching draws with a per-row key chain
 ``fold_in(fold_in(base_key, sample_seed[b]), slot_iters[b])`` — a request's
 stream depends only on its own seed and progress, so sampled generation is
@@ -59,6 +74,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import GenerationConfig, ModelConfig
 from repro.core import sampler as smp
@@ -160,6 +176,9 @@ class DiffusionEngine:
             assert page_size > 0
         self._jit_run_block = jax.jit(self._run_block)   # compile once, reuse
         self._jit_step = jax.jit(self._engine_step)
+        # donated pool: the fork updates pages in place instead of copying
+        # the whole pool (callers drop the pre-fork state immediately)
+        self._jit_fork_kv = jax.jit(self._fork_kv_pools, donate_argnums=(0,))
         self.step_trace_count = 0   # incremented per trace of _engine_step
 
         self.mask_id = self.cfg.vocab_size          # first padded-vocab slot
@@ -279,22 +298,27 @@ class DiffusionEngine:
         if sample_seeds is None:
             sample_seeds = jnp.arange(b, dtype=jnp.int32)
 
+        # sparse eviction is sticky across blocks: the retained set only ever
+        # shrinks (outside the current block), so kv_valid threads through
+        # the block loop exactly as EngineState carries it in serving
+        kv_valid = jnp.ones((b, p + gen.gen_length), bool)
         for blk in range(n_blocks):
             bs = jnp.full((b,), p + blk * lb, jnp.int32)
             iters0 = jnp.full((b,), blk * gen.resolved_steps(), jnp.int32)
-            tokens = self._jit_run_block(params, tokens, key, bs, iters0,
-                                         sample_seeds, prompt_start, enc_out)
+            tokens, kv_valid = self._jit_run_block(
+                params, tokens, kv_valid, key, bs, iters0,
+                sample_seeds, prompt_start, enc_out)
         return tokens
 
     # ------------------------------------------------------------------
     # per-block loop
     # ------------------------------------------------------------------
-    def _run_block(self, params, tokens, key, bs, iters0, seeds, prompt_start,
-                   enc_out):
+    def _run_block(self, params, tokens, kv_valid0, key, bs, iters0, seeds,
+                   prompt_start, enc_out):
         gen = self.gen
         b, t_total = tokens.shape
         bs = self._bs_rows(bs, b)
-        state = self.make_block_state(tokens, key)
+        state = self.make_block_state(tokens, key)._replace(kv_valid=kv_valid0)
         block_tables = self._identity_block_tables(b, t_total) if self.paged else None
         max_steps = gen.resolved_steps() + 1
 
@@ -310,7 +334,7 @@ class DiffusionEngine:
             return self._apply_unmask(st, bs, *outs)
 
         state = jax.lax.while_loop(cond, body, state)
-        return state.tokens
+        return state.tokens, state.kv_valid
 
     def _apply_unmask(self, st: BlockState, bs, caches, conf, pred, hidden,
                       kv_valid, active: Optional[jax.Array] = None):
@@ -400,12 +424,19 @@ class DiffusionEngine:
             st,
         )
 
-    def _branch_index(self, t: jax.Array) -> jax.Array:
-        gen = self.gen
-        pp, bp = gen.prompt_refresh_period, gen.block_refresh_period
-        prompt_r = (t == 0)
+    def _prompt_refresh_pred(self, t):
+        """Prompt-refresh predicate on a phase ``t`` — works on python ints
+        (host-side ``is_prompt_refresh``) and traced arrays
+        (``_branch_index``) alike, so there is exactly ONE cadence truth."""
+        pp = self.gen.prompt_refresh_period
+        r = t == 0
         if pp > 0:
-            prompt_r |= (t % pp) == 0
+            r |= (t % pp) == 0
+        return r
+
+    def _branch_index(self, t: jax.Array) -> jax.Array:
+        bp = self.gen.block_refresh_period
+        prompt_r = self._prompt_refresh_pred(t)
         block_r = jnp.zeros((), bool)
         if bp > 0:
             block_r = (t % bp) == 0
@@ -444,6 +475,67 @@ class DiffusionEngine:
             sample_seeds=jnp.zeros((batch,), jnp.int32),
             block_tables=block_tables,
         )
+
+    # ------------------------------------------------------------------
+    # memory manager v2 hooks (prefix sharing + page-aligned eviction)
+    # ------------------------------------------------------------------
+    def _fork_kv_pools(self, kv_caches, src, dst):
+        impl = "pallas" if self.attn_impl == "pallas" else "xla"
+        return jax.tree_util.tree_map(
+            lambda pool: ops.fork_pages(pool, src, dst, impl=impl), kv_caches)
+
+    def fork_pages(self, state: EngineState, src, dst) -> EngineState:
+        """Copy-on-write fork: physical page ``src[i]`` is copied onto
+        ``dst[i]`` in every self-attention KV pool plane (K, V, int8 scales,
+        all layer groups).  The scheduler calls this right before a refresh
+        would scatter diverged content into a shared (refcount > 1 ⇒
+        read-only) page, then repoints the forking slot's block-table row at
+        ``dst`` host-side.  The fork list is padded to a multiple of 8 with
+        ``(0, 0)`` no-ops (garbage page onto itself) so the jitted copy
+        program is shape-stable; the pool is donated, so the copy is
+        genuinely in place — callers must drop the pre-fork state (the
+        scheduler reassigns ``self.state`` with the return value)."""
+        assert self.paged, "fork_pages is a paged-pool operation"
+        src = np.asarray(src, np.int32).ravel()
+        dst = np.asarray(dst, np.int32).ravel()
+        assert src.shape == dst.shape
+        if src.size == 0:
+            return state
+        pad = -(-src.size // 8) * 8 - src.size
+        src = np.concatenate([src, np.zeros(pad, np.int32)])
+        dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+        caches = dict(state.caches)
+        caches["kv"] = self._jit_fork_kv(
+            state.caches["kv"], jnp.asarray(src), jnp.asarray(dst))
+        return state._replace(caches=caches)
+
+    def is_prompt_refresh(self, phase: int) -> bool:
+        """Whether the step at within-block iteration ``phase`` is a prompt
+        refresh (``_branch_index`` branch 2) — the only branch that scatters
+        into prompt pages.  The scheduler keys CoW forks and eviction
+        reclaim on this; it shares ``_prompt_refresh_pred`` with
+        ``_branch_index``, so the two cannot drift apart."""
+        return bool(self._prompt_refresh_pred(int(phase)))
+
+    def dead_page_report(self, state: EngineState) -> np.ndarray:
+        """[B, n_vpages] bool — mapped virtual pages every one of whose rows
+        is dead (``kv_pos < 0``: sparse-evicted or pad) and that lie entirely
+        before the slot's current block, i.e. can never be revived by the
+        in-block retention override as ``bs`` only moves forward.  These are
+        the pages the scheduler unmaps and returns to the free list; under
+        sticky eviction nothing will ever read them again, and the next
+        refresh's scatters to them clamp to the garbage page."""
+        assert self.paged and state.block_tables is not None
+        ps = self.page_size
+        kv_valid = np.asarray(state.kv_valid)
+        b, t = kv_valid.shape
+        pos = np.arange(t, dtype=np.int32)[None]
+        alive = kv_valid & (pos >= np.asarray(state.prompt_start)[:, None])
+        page_alive = alive.reshape(b, t // ps, ps).any(axis=2)
+        page_end = (np.arange(t // ps, dtype=np.int32) + 1) * ps
+        settled = page_end[None, :] <= np.asarray(state.bs)[:, None]
+        return (np.asarray(state.block_tables) >= 0) & ~page_alive & settled \
+            & np.asarray(state.active)[:, None]
 
     def step(self, params, state: EngineState,
              enc_out: Optional[jax.Array] = None) -> EngineState:
@@ -515,10 +607,25 @@ class DiffusionEngine:
         Pad prompt rows (pos < prompt_start) are computed but masked out of
         every attention read (``kv_pos < 0``) and — in paged mode — never
         mapped, so they cost no pool pages; their scatters land on the
-        garbage page."""
+        garbage page.
+
+        Under sparse eviction the refresh is *sticky*: rows outside the
+        current block that a previous eviction dropped stay dead — they are
+        masked out of this pass's attention reads, excluded from the probe,
+        and can never re-enter the retained set.  Their K/V are still
+        recomputed and scattered, but in paged mode the scheduler may have
+        already unmapped their page (the scatter lands on the garbage page),
+        which is exactly why stickiness is required for dense-vs-paged
+        bit-identity."""
         model, gen = self.model, self.gen
         b, t_total = st.tokens.shape
+        lb = gen.block_length
         cols = self._block_cols(bs)
+        col = jnp.arange(t_total, dtype=jnp.int32)[None]
+        in_block = (col >= bs[:, None]) & (col < (bs + lb)[:, None])
+        # the current block is always attendable/retained; everything else
+        # keeps its carried validity (sticky outside the block)
+        attend_valid = st.kv_valid | in_block
 
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
@@ -530,7 +637,7 @@ class DiffusionEngine:
             caches = jax.tree_util.tree_map(
                 jax.lax.with_sharding_constraint, caches, self.cache_shardings
             )
-        kv_pos = self._kv_pos(jnp.ones((b, t_total), bool), prompt_start)
+        kv_pos = self._kv_pos(attend_valid, prompt_start)
         ctx = self._ctx(
             "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
             block_start=bs, enc_out=enc_out,
@@ -548,8 +655,12 @@ class DiffusionEngine:
 
         kv_valid = jnp.ones((b, t_total), bool)
         if gen.sparse_attention:
-            kv_valid = self._sparse_evict(params, caches, hidden, bs,
-                                          st.tokens, prompt_start, block_tables)
+            keep = self._sparse_evict(params, caches, hidden, bs, st.tokens,
+                                      prompt_start, block_tables,
+                                      kv_valid=attend_valid)
+            # sticky: a refresh can only shrink the retained set outside the
+            # current block — dead rows stay dead (their page may be gone)
+            kv_valid = keep & attend_valid
         return caches, conf, pred, tuple(hidden), kv_valid
 
     def _decode_step(self, params, bs, iters, seeds, prompt_start,
@@ -636,15 +747,20 @@ class DiffusionEngine:
     # Sparse-dLLM-style cache eviction (App. C.3.2 integration)
     # ------------------------------------------------------------------
     def _sparse_evict(self, params, caches, hidden, bs, tokens,
-                      prompt_start=None, block_tables=None):
+                      prompt_start=None, block_tables=None, kv_valid=None):
         """Score out-of-block cache rows by the attention they receive from
         the current block's queries at the first skip-stage layer; retain the
         top ``sparse_retention`` fraction (kernel-size mean pooling).
 
-        Positions the block can never attend — pad prompt rows and unmapped
-        virtual pages (whose gathered K rows are garbage-page content) — are
-        masked out of the probe softmax and ranked below everything, so they
-        neither soak up attention mass nor win retention slots."""
+        Positions the block can never attend — pad prompt rows, rows a
+        previous eviction already dropped (``kv_valid`` false; their paged
+        backing may have been reclaimed), and unmapped virtual pages (whose
+        gathered K rows are garbage-page content) — are masked out of the
+        probe softmax and ranked below everything, so they neither soak up
+        attention mass nor win retention slots.  The caller ANDs the result
+        with the carried ``kv_valid`` (sticky eviction), and the scheduler
+        turns fully-dead pages into free-list returns via
+        ``dead_page_report``."""
         gen, cfg = self.gen, self.cfg
         b, t_total = tokens.shape
         lb = gen.block_length
@@ -667,6 +783,8 @@ class DiffusionEngine:
         attendable = jnp.ones((b, t_total), bool)
         if prompt_start is not None:
             attendable &= col >= prompt_start[:, None]
+        if kv_valid is not None:
+            attendable &= kv_valid
         if block_tables is not None:               # paged: pool -> dense view
             kcache = ops.gather_pages(kcache, block_tables)
             attendable &= jnp.repeat(block_tables >= 0, self.page_size, axis=1)

@@ -27,6 +27,13 @@ output routing).  Unmapped entries (block table < 0) clamp to the reserved
 garbage page 0 and are masked out through ``kv_pos < 0``; because the
 index_map then repeats the same physical block, the Pallas pipeline elides
 the redundant DMA — HBM traffic is proportional to *mapped* pages only.
+
+That DMA-elision property is what memory manager v2 leans on: a prefix page
+shared by several slots is fetched once per slot but stored once, and a
+page that page-aligned eviction unmapped mid-request degrades to the
+repeated-garbage-page case — the kernel needs no changes as sharing and
+reclaim evolve, because both are pure block-table edits
+(docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 

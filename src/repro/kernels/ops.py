@@ -24,7 +24,11 @@ from repro.kernels.flash_attention import (
     paged_flash_attention_kernel,
 )
 from repro.kernels.importance import importance_kernel
-from repro.kernels.scatter_kv import paged_scatter_kv_kernel, scatter_kv_kernel
+from repro.kernels.scatter_kv import (
+    fork_pages_kernel,
+    paged_scatter_kv_kernel,
+    scatter_kv_kernel,
+)
 from repro.kernels.ssd_scan import ssd_chunk_kernel
 
 Impl = Literal["xla", "pallas"]
@@ -500,6 +504,44 @@ def scatter_rows_paged(
     return flat.at[dest.reshape(-1)].set(upd).reshape(pool.shape)
 
 
+def fork_pages(
+    pool: jax.Array,          # [G, P, ps, ...] layer-group-stacked page pool
+    src: jax.Array,           # [F] int32 physical source pages
+    dst: jax.Array,           # [F] int32 physical destination pages
+    *,
+    impl: Impl = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Copy-on-write page fork: ``pool[:, dst[f]] = pool[:, src[f]]``.
+
+    The CoW half of prefix page sharing: when a slot holding a read-only
+    (refcount > 1) page is about to receive a scatter, the scheduler forks the
+    page onto a fresh one from the free list and repoints the slot's block
+    table — the sharer keeps the original.  ``src[f] == dst[f]`` pairs are
+    exact no-ops (the scheduler pads fork lists with ``(0, 0)``, the garbage
+    page onto itself, to keep jitted shapes stable).  A real destination page
+    never appears as a source in the same call — fresh pages come off the
+    free list — so the in-place alias is race-free.
+
+    Works on any pool-plane rank: K/V planes ``[G, P, ps, Hkv, Dh]`` and int8
+    scale planes ``[G, P, ps, Hkv]`` are both flattened to ``[G, P, ps, M]``
+    for the kernel and restored.
+    """
+    g, p, ps = pool.shape[:3]
+    assert src.shape == dst.shape and src.ndim == 1
+    if impl == "pallas":
+        p4 = pool.reshape(g, p, ps, -1)
+        out = fork_pages_kernel(
+            p4, src, dst,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+        return out.reshape(pool.shape)
+    # XLA mirror: gather the source pages, scatter onto the destinations.
+    # Duplicate (0, 0) no-op pads write identical content, so scatter order
+    # cannot matter — bit-comparable to the kernel.
+    return pool.at[:, dst].set(pool[:, src])
+
+
 # ---------------------------------------------------------------------------
 # Importance score (Eq. 1)
 # ---------------------------------------------------------------------------
@@ -531,5 +573,6 @@ __all__ = [
     "ssd",
     "scatter_rows",
     "scatter_rows_paged",
+    "fork_pages",
     "importance_score",
 ]

@@ -1,4 +1,4 @@
-"""Partial KV-cache scatter update (TPU target).
+"""Partial KV-cache scatter update + copy-on-write page fork (TPU target).
 
 ES-dLLM recomputes K/V only for the active token subset and scatter-updates
 the full cache in place (paper Alg. 1 line 3).  The row indices are dynamic,
@@ -10,6 +10,14 @@ makes the update truly in place on TPU (the cache never round-trips HBM).
 The paged variant routes through a per-slot block table on top of the same
 trick: destination = (physical page, in-page offset) computed from TWO
 prefetched scalar arrays (row indices + block table).
+
+``fork_pages_kernel`` is the third member of the family: the copy-on-write
+fork of prefix page sharing (memory manager v2).  It copies whole physical
+pages ``src[f] -> dst[f]`` inside the pool — both the *input* and the
+*output* BlockSpec ``index_map`` read a prefetched scalar array, so one grid
+step DMAs one page pool->pool without the host ever materializing it.  The
+scheduler pads the fork list with ``(0, 0)`` pairs (garbage page onto
+itself, an exact no-op) to keep the compiled program shape-stable.
 """
 from __future__ import annotations
 
@@ -94,3 +102,44 @@ def paged_scatter_kv_kernel(
         input_output_aliases={3: 0},   # pool (arg index incl. scalar prefetch) -> out
         interpret=interpret,
     )(idx.astype(jnp.int32), block_tables.astype(jnp.int32), new, pool)
+
+
+def _fork_kernel(src_ref, dst_ref, page_ref, out_ref):
+    del src_ref, dst_ref  # routing happens in the index_maps
+    out_ref[...] = page_ref[...]
+
+
+def fork_pages_kernel(
+    pool: jax.Array,   # [G, P, ps, M] page pool (layer-group stacked)
+    src: jax.Array,    # [F] int32 physical source pages
+    dst: jax.Array,    # [F] int32 physical destination pages
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Copy-on-write fork: pool[:, dst[f]] = pool[:, src[f]] for every f.
+
+    One grid step per (layer group, fork); the *input* index_map resolves the
+    source page and the *output* index_map the destination page from the two
+    prefetched scalar arrays.  ``src[f] == dst[f]`` entries (the scheduler's
+    ``(0, 0)`` shape padding) copy a page onto itself — an exact no-op.
+    Callers must guarantee a real destination page never doubles as a source
+    in the same call (fresh pages come off the free list, so this holds by
+    construction)."""
+    g, p, ps, m = pool.shape
+    f = src.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, f),
+        in_specs=[
+            pl.BlockSpec((1, 1, ps, m), lambda gi, fi, src, dst: (gi, src[fi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ps, m), lambda gi, fi, src, dst: (gi, dst[fi], 0, 0)),
+    )
+    return pl.pallas_call(
+        _fork_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},   # pool (arg index incl. scalar prefetch) -> out
+        interpret=interpret,
+    )(src.astype(jnp.int32), dst.astype(jnp.int32), pool)

@@ -4,9 +4,14 @@
 Two runtimes:
   * ``stream`` (default) — continuous batching: slot admission at block
     boundaries, slot recycling on completion, per-request block streaming.
+    ``--paged`` turns the KV caches into one shared page pool; add
+    ``--prefix-sharing`` (and e.g. ``--dup-prompts``) for copy-on-write
+    prompt-page dedup across duplicate requests (docs/ARCHITECTURE.md).
   * ``batch``  — the lock-step micro-batching baseline (paper §6.1 setting).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llada-8b --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --paged --prefix-sharing \
+      --dup-prompts --requests 8
 """
 from __future__ import annotations
 
@@ -42,6 +47,13 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="pool pages incl. garbage page (default: dense-equivalent)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="CoW prefix page sharing: same-cycle duplicate "
+                         "prompts map the same physical prompt pages "
+                         "(requires --paged; see docs/ARCHITECTURE.md)")
+    ap.add_argument("--dup-prompts", action="store_true",
+                    help="submit one prompt duplicated --requests times "
+                         "(the prefix-sharing showcase workload)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -69,13 +81,20 @@ def main() -> None:
         server = StreamScheduler(model, params, gen, max_slots=args.batch,
                                  prompt_len=args.prompt_len, stream_cb=stream_cb,
                                  paged=args.paged, page_size=args.page_size,
-                                 kv_pages=args.kv_pages)
+                                 kv_pages=args.kv_pages,
+                                 prefix_sharing=args.prefix_sharing)
     else:
         server = BatchServer(model, params, gen, batch_size=args.batch,
                              prompt_len=args.prompt_len)
 
     rng = np.random.default_rng(0)
+    if args.dup_prompts:
+        dup_prompt = rng.integers(3, cfg.vocab_size,
+                                  args.prompt_len).astype(np.int32)
     for _ in range(args.requests):
+        if args.dup_prompts:
+            server.submit(Request(prompt=dup_prompt.copy()))
+            continue
         plen = int(rng.integers(8, args.prompt_len + 1))
         server.submit(Request(prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32)))
 
@@ -88,7 +107,12 @@ def main() -> None:
                  f"  p95={server.stats.latency_pct(95):.2f}s")
         if args.paged:
             line += (f"  peak_pages={server.stats.peak_pages_in_use}"
-                     f"/{server.stats.pages_total}")
+                     f"/{server.stats.pages_total}"
+                     f"  concurrency_peak={server.stats.resident_peak}")
+            if args.prefix_sharing:
+                line += f"  cow_forks={server.stats.cow_forks}"
+            if gen.sparse_attention:
+                line += f"  pages_reclaimed={server.stats.pages_reclaimed}"
     print(line)
     print("sample output:", done[0].output[:24].tolist())
 

@@ -43,6 +43,16 @@ class PagedKVCache(NamedTuple):
     positions ``[vp*ps, (vp+1)*ps)``) to a physical page, with ``-1`` for
     unmapped pages (masked on read, routed to the garbage page 0 on write).
     ``page_size`` is static — it parameterizes kernel grids, not data.
+
+    Ownership contract (docs/ARCHITECTURE.md): this layer treats the pool
+    as write-through and mapping-oblivious — it scatters every fresh row
+    through the table unconditionally.  Page ownership lives one level up:
+    the scheduler's ``PageAllocator`` refcounts physical pages, and a page
+    mapped by several slots (refcount > 1, prefix sharing) is READ-ONLY in
+    the sense that all sharers are guaranteed to scatter bit-identical
+    content; when that guarantee is about to lapse the scheduler forks the
+    page (``ops.fork_pages``) and repoints the block table BEFORE this
+    layer runs again.
     """
     cache: KVCache
     block_tables: jax.Array              # [B, n_vpages] int32

@@ -186,7 +186,14 @@ class Model:
         layout ``[G, num_pages, page_size, Hkv, Dh]`` shared by all slots and
         addressed through ``ForwardCtx.block_tables`` (page 0 is the reserved
         garbage page).  Cross-attention and SSM caches stay per-slot dense —
-        they are O(block) or O(enc) per slot, not O(sequence)."""
+        they are O(block) or O(enc) per slot, not O(sequence).
+
+        The pool allocated here is the single backing store the memory
+        manager operates on: the scheduler's allocator hands its pages out
+        (refcounted, prefix-shared across duplicate prompts), the engine's
+        ``fork_pages`` copies pages for copy-on-write, and page-aligned
+        eviction returns fully-dead pages — all without this layout ever
+        changing shape (docs/ARCHITECTURE.md)."""
         cfg = self.cfg
         g = self.n_groups
         caches: dict[str, dict[str, Any]] = {"kv": {}, "cross": {}, "ssm": {}, "ssmh": {}}

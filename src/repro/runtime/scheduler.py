@@ -23,8 +23,31 @@ all control flow host-side:
   Slot count is thereby decoupled from worst-case sequence length: a pool
   sized for N dense slots can serve 2N+ mixed-length slots.
 
+* **prefix page sharing** (``prefix_sharing=True``, paged only): admission
+  hashes each request's full prompt pages; requests admitted in the SAME
+  cycle with an identical prompt (and identical shape: prompt length and
+  requested blocks) map the same physical pages read-only, with a refcount
+  per page.  dLLM attention is bidirectional — prompt K/V depend on the
+  whole sequence state — so pages are shareable exactly while every
+  sharer's full sequence state is identical at every write: greedy
+  (temperature-0) cohorts stay identical for life and share until
+  retirement; sampled cohorts diverge at their first draw, so the
+  scheduler copy-on-writes (``engine.fork_pages``) every shared page onto
+  reserve pages right before the first refresh that would scatter diverged
+  prompt K/V.  Reserves are allocated at admission, so a fork can never
+  deadlock on an empty free list.
+
+* **page-aligned sparse eviction**: sparse-attention eviction is sticky
+  (see core.engine), so once every row of a mapped page behind the
+  current block is dead (``kv_pos < 0``) nothing will ever read or
+  validly write it again — after each refresh the scheduler unmaps such
+  pages (``engine.dead_page_report``) and returns them to the free list,
+  where they are immediately re-admittable, instead of leaving them
+  masked-but-resident.
+
 ``drain()`` keeps the offline contract of ``BatchServer`` (submit everything,
 call drain, read ``Request.output``), so existing callers keep working.
+docs/ARCHITECTURE.md documents the full memory-manager contract.
 """
 from __future__ import annotations
 
@@ -34,6 +57,7 @@ from collections import deque
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GenerationConfig
@@ -49,10 +73,16 @@ class SchedulerStats:
     tokens_out: int = 0
     wall_s: float = 0.0                  # serving-loop wall: admission + engine.step
     latencies_s: list = dataclasses.field(default_factory=list)
-    # paged-KV gauges (0 / static in dense mode)
-    pages_in_use: int = 0                # currently mapped pool pages
+    # paged-KV gauges (0 / static in dense mode).  pages_in_use counts
+    # PHYSICAL pages: a page mapped by several slots through prefix sharing
+    # counts once (refcount-aware), so the gauge is comparable to pool bytes.
+    pages_in_use: int = 0                # physical pool pages with >=1 claim
     pages_total: int = 0                 # allocatable pages (excl. garbage page)
     peak_pages_in_use: int = 0
+    shared_mappings: int = 0             # extra block-table claims on shared pages
+    cow_forks: int = 0                   # pages copied by copy-on-write forks
+    pages_reclaimed: int = 0             # pages returned early by page-aligned eviction
+    resident_peak: int = 0               # max concurrently admitted requests
 
     @property
     def goodput(self) -> float:
@@ -65,6 +95,10 @@ class SchedulerStats:
             "pages_in_use": self.pages_in_use,
             "pages_total": self.pages_total,
             "peak_pages_in_use": self.peak_pages_in_use,
+            "shared_mappings": self.shared_mappings,
+            "cow_forks": self.cow_forks,
+            "pages_reclaimed": self.pages_reclaimed,
+            "resident_peak": self.resident_peak,
         }
 
     # BatchServer.stats compatibility
@@ -87,16 +121,35 @@ class SchedulerStats:
 
 
 class PageAllocator:
-    """Host-side free-list over the shared KV pool.
+    """Host-side refcounted free-list over the shared KV pool.
 
     Page 0 is the reserved garbage page (unmapped block-table entries clamp
     to it) and is never handed out; pages 1..num_pages-1 are allocatable.
+
+    v2 (memory manager): every allocated page carries a refcount.
+    ``alloc`` hands pages out at refcount 1; ``share`` adds a claim — the
+    prefix-sharing path, where refcount > 1 means the page is READ-ONLY and
+    a scatter of diverged content must fork it first (``engine.fork_pages``);
+    ``release`` drops one claim and returns the page to the free list when
+    the last claim dies.  ``used_pages`` counts *physical* pages — a page
+    shared by N slots counts once — which is what makes the scheduler's
+    ``pages_in_use`` gauge comparable to pool bytes.
+
+    The allocator also keeps the **prefix page hash**: full prompt pages
+    registered under a content key at admission, so duplicate prompts
+    admitted in the same cycle can map the same physical pages.  The
+    scheduler clears the hash at the end of every admission cycle, because
+    bidirectional dLLM attention makes prompt K/V depend on the whole
+    sequence state: pages written by slots admitted in different cycles are
+    never content-equal (docs/ARCHITECTURE.md, sharing contract).
     """
 
     def __init__(self, num_pages: int):
         assert num_pages >= 2, "pool needs the garbage page + >=1 real page"
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low ids first
+        self._refcount = [0] * num_pages
+        self._prefix: dict = {}          # content key -> admission-cycle payload
 
     @property
     def free_pages(self) -> int:
@@ -106,13 +159,51 @@ class PageAllocator:
     def used_pages(self) -> int:
         return (self.num_pages - 1) - len(self._free)
 
+    @property
+    def shared_mappings(self) -> int:
+        """Extra claims created by sharing (sum of refcount-1 over pages)."""
+        return sum(rc - 1 for rc in self._refcount if rc > 1)
+
+    def refcount(self, page: int) -> int:
+        return self._refcount[page]
+
     def alloc(self, n: int) -> Optional[list[int]]:
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refcount[p] = 1
+        return pages
 
-    def free(self, pages: list[int]) -> None:
-        self._free.extend(pages)
+    def share(self, pages: list[int]) -> None:
+        """Add one read-only claim per page (prefix sharing)."""
+        for p in pages:
+            assert self._refcount[p] > 0, f"sharing unallocated page {p}"
+            self._refcount[p] += 1
+
+    def release(self, pages: list[int]) -> int:
+        """Drop one claim per page; the last claim frees the page.  Returns
+        the number of pages PHYSICALLY freed (refcount hit 0) — the unit
+        gauges must report, since a shared page's other claims keep it
+        resident."""
+        freed = 0
+        for p in pages:
+            assert self._refcount[p] > 0, f"double free of page {p}"
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                self._free.append(p)
+                freed += 1
+        return freed
+
+    # -- prefix page hash (valid within ONE admission cycle) ---------------
+    def register_prefix(self, key, payload) -> None:
+        self._prefix[key] = payload
+
+    def lookup_prefix(self, key):
+        return self._prefix.get(key)
+
+    def clear_prefix_index(self) -> None:
+        self._prefix.clear()
 
 
 class StreamScheduler:
@@ -133,6 +224,7 @@ class StreamScheduler:
         paged: bool = False,
         page_size: int = 16,
         kv_pages: Optional[int] = None,     # None => dense-equivalent pool
+        prefix_sharing: bool = False,       # CoW prompt-page dedup (paged only)
         **engine_kw,
     ):
         assert gen.gen_length % gen.block_length == 0
@@ -146,6 +238,9 @@ class StreamScheduler:
         self.clock = clock
         self.paged = paged
         self.page_size = page_size
+        assert not (prefix_sharing and not paged), \
+            "prefix_sharing shares pool pages — it requires paged=True"
+        self.prefix_sharing = prefix_sharing
         t_total = prompt_len + gen.gen_length
         self.allocator: Optional[PageAllocator] = None
         if paged:
@@ -166,7 +261,13 @@ class StreamScheduler:
         self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.slot_streamed: list[int] = [0] * max_slots
         self.slot_blocks: list[int] = [0] * max_slots   # blocks this request asked for
+        # one entry per page CLAIM this slot holds (shared pages included —
+        # releasing a claim only frees the page when its refcount hits 0)
         self.slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
+        # sharing cohorts: {"owner": slot, "slots": {slot: [(vp, page)]},
+        # "reserve": {slot: [pages]}, "born": step} — see _admit/_cow_fork
+        self.cohorts: list[dict] = []
+        self._step_count = 0
         self.stats = SchedulerStats()
         if self.allocator is not None:
             self.stats.pages_total = self.allocator.num_pages - 1
@@ -233,7 +334,18 @@ class StreamScheduler:
 
         In paged mode admission is additionally page-availability-gated:
         the queue head waits (FIFO, no overtaking) until retirements return
-        enough pages."""
+        enough pages.
+
+        With ``prefix_sharing`` the request's full prompt pages are hashed
+        into the allocator's prefix index; a same-cycle duplicate (identical
+        prompt bytes, prompt length, and requested blocks) maps the owner's
+        physical pages read-only (refcount + 1) and allocates only its
+        private pages — plus, when sampling, an equal number of CoW
+        *reserve* pages so the pre-refresh fork can never fail on an empty
+        free list.  The index is cleared at the end of the cycle: slots
+        admitted in different cycles have different sequence states, so
+        their prompt K/V are never content-equal (bidirectional attention).
+        """
         free = self._free_slots()
         if not free or not self.queue:
             return
@@ -241,6 +353,8 @@ class StreamScheduler:
         t_total = self.prompt_len + self.gen.gen_length
         now = self.clock()
         lb = self.gen.block_length
+        sampled = self.gen.temperature > 0
+        cycle_cohorts: dict = {}        # share key -> cohort (this cycle only)
         while free and self.queue:
             req = self.queue[0]
             n_blocks = self.n_blocks
@@ -249,12 +363,34 @@ class StreamScheduler:
                 n_blocks = min(max(-(-req.max_new_tokens // lb), 1), self.n_blocks)
             p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
             pages: list[int] = []
+            shared_map: list[tuple[int, int]] = []   # [(vp, physical page)]
+            reserve: list[int] = []
+            share_key = None
+            share_hit = None
+            first_vp = last_vp = 0
             if self.allocator is not None:
                 first_vp, last_vp, need = self._pages_needed(len(p), n_blocks)
-                got = self.allocator.alloc(need)
-                if got is None:
-                    break                       # page-gated: retry next cycle
-                pages = got
+                vp0 = -(-(self.prompt_len - len(p)) // self.page_size)
+                vp1 = self.prompt_len // self.page_size
+                if (self.prefix_sharing and not self.expects_enc
+                        and vp1 > vp0):
+                    share_key = (p.tobytes(), len(p), n_blocks)
+                    share_hit = self.allocator.lookup_prefix(share_key)
+                if share_hit is not None:
+                    owner_slot, owner_map = share_hit
+                    shared_map = list(owner_map)
+                    n_res = len(shared_map) if sampled else 0
+                    got = self.allocator.alloc(need - len(shared_map) + n_res)
+                    if got is None:
+                        break                   # page-gated: retry next cycle
+                    pages = got[: need - len(shared_map)]
+                    reserve = got[need - len(shared_map):]
+                    self.allocator.share([pg for _, pg in shared_map])
+                else:
+                    got = self.allocator.alloc(need)
+                    if got is None:
+                        break                   # page-gated: retry next cycle
+                    pages = got
             slot = free.pop(0)
             self.queue.popleft()
             row = np.full((t_total,), self.engine.mask_id, np.int32)
@@ -275,10 +411,35 @@ class StreamScheduler:
             )
             if self.allocator is not None:
                 bt_row = np.full((t_total // self.page_size,), -1, np.int32)
-                bt_row[first_vp:last_vp] = pages
+                shared_vps = {vp for vp, _ in shared_map}
+                priv = iter(pages)
+                for vp in range(first_vp, last_vp):
+                    if vp not in shared_vps:
+                        bt_row[vp] = next(priv)
+                for vp, pg in shared_map:
+                    bt_row[vp] = pg
                 st = st._replace(
                     block_tables=st.block_tables.at[slot].set(bt_row))
-                self.slot_pages[slot] = pages
+                # one claim per mapped page; CoW reserves are claims too but
+                # live in the cohort until consumed by a fork or retirement
+                self.slot_pages[slot] = pages + [pg for _, pg in shared_map]
+                if share_key is not None:
+                    if share_hit is not None:
+                        cohort = cycle_cohorts.get(share_key)
+                        if cohort is None:
+                            cohort = {"owner": owner_slot,
+                                      "slots": {owner_slot: list(owner_map)},
+                                      "reserve": {},
+                                      "born": self._step_count}
+                            self.cohorts.append(cohort)
+                            cycle_cohorts[share_key] = cohort
+                        cohort["slots"][slot] = list(shared_map)
+                        if reserve:
+                            cohort["reserve"][slot] = reserve
+                    else:
+                        my_map = [(vp, int(bt_row[vp]))
+                                  for vp in range(vp0, vp1)]
+                        self.allocator.register_prefix(share_key, (slot, my_map))
                 self.stats.pages_in_use = self.allocator.used_pages
                 self.stats.peak_pages_in_use = max(
                     self.stats.peak_pages_in_use, self.stats.pages_in_use)
@@ -292,6 +453,14 @@ class StreamScheduler:
             self.slot_req[slot] = req
             self.slot_streamed[slot] = 0
         self.state = st
+        if self.allocator is not None:
+            # cross-cycle sharing is unsound (bidirectional attention):
+            # the prefix index only ever describes THIS cycle's admissions
+            self.allocator.clear_prefix_index()
+            self.stats.shared_mappings = self.allocator.shared_mappings
+        self.stats.resident_peak = max(
+            self.stats.resident_peak,
+            sum(r is not None for r in self.slot_req))
 
     # ------------------------------------------------------------------
     # the serving loop
@@ -303,16 +472,123 @@ class StreamScheduler:
         """One engine iteration (+ boundary bookkeeping).  Returns False and
         does nothing when there is neither queued nor resident work."""
         t0 = self.clock()           # admission work (incl. encode) is wall time
-        if int(self.state.phase) == 0:
+        phase = int(self.state.phase)
+        if phase == 0:
             self._admit()
         if not any(r is not None for r in self.slot_req):
             return False
+        # the upcoming step is a prompt refresh — the only branch that
+        # scatters into prompt pages — per the engine's own cadence
+        refresh = self.engine.is_prompt_refresh(phase)
+        if self.paged and refresh:
+            self._cow_fork_before_refresh()
         self.state = self.engine.step(self.params, self.state, self._enc_out)
         jax.block_until_ready(self.state.tokens)
+        self._step_count += 1
         self.stats.wall_s += self.clock() - t0
+        if self.paged and self.gen.sparse_attention and refresh:
+            self._reclaim_dead_pages()
         if int(self.state.phase) == 0:
             self._finish_cycle()
         return True
+
+    # ------------------------------------------------------------------
+    # memory manager v2: CoW fork + page-aligned eviction
+    # ------------------------------------------------------------------
+    def _dissolve_cohort(self, cohort: dict) -> None:
+        """Drop a cohort whose membership fell to <= 1.  A sole survivor's
+        shared pages are exclusively its own now (the other claims died with
+        their slots), so it will never fork — release any CoW reserve it is
+        still holding, or those pages leak for the pool's lifetime."""
+        for reserve in cohort["reserve"].values():
+            self.allocator.release(reserve)
+        cohort["reserve"] = {}
+        self.cohorts.remove(cohort)
+
+    def _cow_fork_before_refresh(self) -> None:
+        """Copy-on-write: the upcoming refresh scatters recomputed prompt
+        K/V into every mapped page.  Greedy cohorts stay bit-identical, so
+        every sharer rewrites identical bytes and sharing persists; sampled
+        cohorts diverged at their first draw, so each follower forks the
+        shared pages onto its admission-time reserve and repoints its block
+        table BEFORE the refresh can scatter diverged content into a
+        refcount>1 page.
+
+        Under this fork-before-refresh policy the fork's data copy is
+        belt-and-suspenders: the refresh about to run rewrites every row of
+        a (fully-prompt) shared page anyway, so only the repoint and the
+        refcount hand-off are load-bearing.  The copy is kept because it
+        makes the CoW invariant policy-independent — a forked page is a
+        faithful replica no matter when a future policy chooses to fork
+        (e.g. mid-block, where the content IS live)."""
+        if not self.cohorts or self.gen.temperature <= 0:
+            return
+        bt = np.array(self.state.block_tables)
+        all_src: list[int] = []
+        all_dst: list[int] = []
+        for cohort in list(self.cohorts):
+            if self._step_count <= cohort["born"]:
+                continue            # the admission prefill itself: no draws yet
+            for slot in [s for s in cohort["slots"] if s != cohort["owner"]]:
+                mapping = [(vp, pg) for vp, pg in cohort["slots"][slot]
+                           if bt[slot, vp] == pg]    # eviction may have unmapped
+                reserve = cohort["reserve"].pop(slot, [])
+                src = [pg for _, pg in mapping]
+                dst = reserve[: len(src)]
+                assert len(dst) == len(src), "CoW reserve exhausted"
+                if src:
+                    all_src += src
+                    all_dst += dst
+                    for (vp, _), pg in zip(mapping, dst):
+                        bt[slot, vp] = pg
+                    sp = self.slot_pages[slot]
+                    for s_pg, d_pg in zip(src, dst):
+                        sp[sp.index(s_pg)] = d_pg
+                    self.allocator.release(src)      # drop read-only claims
+                    self.stats.cow_forks += len(src)
+                if reserve[len(src):]:               # eviction shrank the need
+                    self.allocator.release(reserve[len(src):])
+                del cohort["slots"][slot]
+            if len(cohort["slots"]) <= 1:
+                self._dissolve_cohort(cohort)
+        if all_src:
+            # one jitted fork over every (src, dst) pair of every cohort and
+            # one block-table upload — followers and cohorts don't serialize
+            self.state = self.engine.fork_pages(self.state, all_src, all_dst)
+            self.state = self.state._replace(block_tables=jnp.asarray(bt))
+        self.stats.shared_mappings = self.allocator.shared_mappings
+        self.stats.pages_in_use = self.allocator.used_pages
+
+    def _reclaim_dead_pages(self) -> None:
+        """Page-aligned sparse eviction: after a refresh re-scored the
+        retention sets, unmap every fully-dead page behind each slot's
+        current block and return it to the free list — freed capacity is
+        immediately admittable instead of masked-but-resident."""
+        dead = self.engine.dead_page_report(self.state)
+        if not dead.any():
+            return
+        bt = np.array(self.state.block_tables)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            vps = np.nonzero(dead[slot])[0]
+            if vps.size == 0:
+                continue
+            pages = [int(bt[slot, vp]) for vp in vps]
+            bt[slot, vps] = -1
+            # count PHYSICAL frees: a shared page reclaims once, when its
+            # last sharer's claim dies (every sharer evicts it identically)
+            self.stats.pages_reclaimed += self.allocator.release(pages)
+            for pg in pages:
+                self.slot_pages[slot].remove(pg)
+            for cohort in self.cohorts:          # shed evicted shared claims
+                if slot in cohort["slots"]:
+                    cohort["slots"][slot] = [
+                        (vp, pg) for vp, pg in cohort["slots"][slot]
+                        if bt[slot, vp] == pg]
+        self.state = self.state._replace(block_tables=jnp.asarray(bt))
+        self.stats.pages_in_use = self.allocator.used_pages
+        self.stats.shared_mappings = self.allocator.shared_mappings
 
     def _finish_cycle(self) -> None:
         """Post-boundary bookkeeping: stream newly completed blocks, retire
@@ -344,15 +620,28 @@ class StreamScheduler:
                 self.stats.latencies_s.append(req.latency_s)
                 self._completed.append(req)
                 self.slot_req[slot] = None
-                if self.allocator is not None and self.slot_pages[slot]:
-                    # return pages immediately and unmap the slot's row —
-                    # a freed page may be re-issued next cycle, and a stale
-                    # mapping would let the idle slot scribble on it
-                    self.allocator.free(self.slot_pages[slot])
-                    self.slot_pages[slot] = []
-                    self.state = self.state._replace(
-                        block_tables=self.state.block_tables.at[slot].set(-1))
+                if self.allocator is not None:
+                    # return page claims immediately and unmap the slot's
+                    # row — a freed page may be re-issued next cycle, and a
+                    # stale mapping would let the idle slot scribble on it.
+                    # A SHARED page only truly frees when its last sharer
+                    # retires (refcount), but this slot's claims always die
+                    # here, including any unconsumed CoW reserve.
+                    if self.slot_pages[slot]:
+                        self.allocator.release(self.slot_pages[slot])
+                        self.slot_pages[slot] = []
+                        self.state = self.state._replace(
+                            block_tables=self.state.block_tables.at[slot].set(-1))
+                    for cohort in list(self.cohorts):
+                        if slot in cohort["slots"]:
+                            del cohort["slots"][slot]
+                            reserve = cohort["reserve"].pop(slot, [])
+                            if reserve:
+                                self.allocator.release(reserve)
+                            if len(cohort["slots"]) <= 1:
+                                self._dissolve_cohort(cohort)
                     self.stats.pages_in_use = self.allocator.used_pages
+                    self.stats.shared_mappings = self.allocator.shared_mappings
 
     def drain(self) -> list[Request]:
         """Offline mode: run until queue and slots are empty (BatchServer

@@ -1,0 +1,276 @@
+"""Memory manager v2: CoW prefix page sharing + page-aligned sparse eviction.
+
+Key invariants (docs/ARCHITECTURE.md has the full contract):
+  * ``ops.fork_pages`` copies physical pages exactly, ``impl="xla"`` and the
+    Pallas kernel (interpret mode) bit-agree, ``(0, 0)`` pads are no-ops;
+  * greedy duplicate prompts admitted in one cycle SHARE their full prompt
+    pages: the refcount-aware ``pages_in_use`` gauge counts a shared page
+    once, stays below the unshared cost, and outputs remain BIT-IDENTICAL
+    to the offline replay (sharers write identical bytes, so last-writer-
+    wins scatters are idempotent);
+  * sampled duplicate prompts diverge at their first draw: the scheduler
+    copy-on-writes the shared pages onto admission-time reserves before the
+    first refresh, and every request still replays its offline per-seed
+    stream bit-exactly;
+  * sticky sparse eviction returns fully-dead pages to the free list
+    mid-flight (``pages_reclaimed``), the freed pages admit new requests
+    immediately, and paged serving stays bit-identical to dense serving.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs import GenerationConfig, SkipStage
+from repro.core import make_engine
+from repro.kernels import ops
+from repro.runtime import PageAllocator, Request, StreamScheduler
+from repro.runtime.request import pad_and_stack
+
+PROMPT_LEN = 16
+GEN = dict(gen_length=16, block_length=8)
+PS = 8                              # t_total = 32 -> 4 vpages per slot
+N_VP = (PROMPT_LEN + GEN["gen_length"]) // PS
+N_PROMPT_VP = PROMPT_LEN // PS      # full prompt pages a duplicate can share
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.reduced(configs.get_config("llada-8b"))
+    cfg = dataclasses.replace(cfg, n_layers=4)
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _es_cfg(**kw):
+    base = dict(mode="es", skip_stages=(SkipStage(1, 0.5),),
+                prompt_refresh_period=8, block_refresh_period=4, **GEN)
+    base.update(kw)
+    return GenerationConfig(**base)
+
+
+def _dup_requests(cfg, n, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(3, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    return [Request(prompt=prompt.copy(), **kw) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the CoW fork op
+# ---------------------------------------------------------------------------
+
+
+def test_fork_pages_copies_content_xla_equals_pallas():
+    pool = jax.random.normal(jax.random.PRNGKey(0), (2, 6, PS, 4, 128))
+    src = jnp.asarray([1, 3, 0, 0, 0, 0, 0, 0], jnp.int32)   # (0,0) = no-op pad
+    dst = jnp.asarray([4, 5, 0, 0, 0, 0, 0, 0], jnp.int32)
+    a = np.asarray(ops.fork_pages(pool, src, dst, impl="xla"))
+    b = np.asarray(ops.fork_pages(pool, src, dst, impl="pallas"))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[:, 4], np.asarray(pool[:, 1]))
+    np.testing.assert_array_equal(a[:, 5], np.asarray(pool[:, 3]))
+    # sources and untouched pages keep their content
+    for pg in (0, 1, 2, 3):
+        np.testing.assert_array_equal(a[:, pg], np.asarray(pool[:, pg]))
+    # int8 scale-plane rank ([G, P, ps, Hkv]) goes through the same path
+    sp = jax.random.normal(jax.random.PRNGKey(1), (2, 6, PS, 4))
+    np.testing.assert_array_equal(
+        np.asarray(ops.fork_pages(sp, src, dst, impl="xla")),
+        np.asarray(ops.fork_pages(sp, src, dst, impl="pallas")))
+
+
+def test_allocator_refcounts_and_prefix_index():
+    al = PageAllocator(8)
+    pages = al.alloc(3)
+    assert al.used_pages == 3 and al.free_pages == 4
+    al.share(pages[:2])
+    assert al.shared_mappings == 2
+    assert al.used_pages == 3, "a shared page must count ONCE"
+    al.release(pages[:2])               # drop the shared claims
+    assert al.used_pages == 3 and al.shared_mappings == 0
+    al.release(pages)                   # last claims -> pages free again
+    assert al.used_pages == 0 and al.free_pages == 7
+    al.register_prefix("k", (0, [(1, pages[0])]))
+    assert al.lookup_prefix("k") is not None
+    al.clear_prefix_index()
+    assert al.lookup_prefix("k") is None
+
+
+# ---------------------------------------------------------------------------
+# greedy cohorts: share for life, bit-identical outputs
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_duplicates_share_pages_and_match_offline(small_model):
+    cfg, model, params = small_model
+    gen = _es_cfg()
+    reqs = _dup_requests(cfg, 3, seed=0)
+    sched = StreamScheduler(model, params, gen, max_slots=4,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            prefix_sharing=True)
+    for r in reqs:
+        sched.submit(r)
+    sched.step()                        # admission cycle's prefill
+    expect = N_VP + 2 * (N_VP - N_PROMPT_VP)   # owner full + followers private
+    assert sched.stats.pages_in_use == expect
+    assert sched.stats.shared_mappings == 2 * N_PROMPT_VP
+    assert sched.stats.pages_in_use < 3 * N_VP, "sharing must beat unshared"
+    done = sched.drain()
+    assert len(done) == 3
+    assert sched.engine.step_trace_count == 1
+    assert sched.stats.pages_in_use == 0 and sched.stats.shared_mappings == 0
+    assert sched.stats.cow_forks == 0, "greedy cohorts never diverge"
+    ref = np.asarray(make_engine(model, gen).generate(
+        params, jnp.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0)))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.output, ref[i, PROMPT_LEN:])
+
+
+def test_sharing_admits_more_concurrent_requests(small_model):
+    """The capacity win: at equal pool bytes, a duplicate-prefix burst admits
+    strictly more concurrent requests with sharing on."""
+    cfg, model, params = small_model
+    gen = _es_cfg()
+    kv_pages = 2 * N_VP + 1             # room for exactly 2 unshared requests
+    peaks = {}
+    for sharing in (False, True):
+        reqs = _dup_requests(cfg, 5, seed=1)
+        sched = StreamScheduler(model, params, gen, max_slots=5,
+                                prompt_len=PROMPT_LEN, paged=True,
+                                page_size=PS, kv_pages=kv_pages,
+                                prefix_sharing=sharing)
+        for r in reqs:
+            sched.submit(r)
+        done = sched.drain()
+        assert len(done) == 5
+        peaks[sharing] = sched.stats.resident_peak
+        assert sched.stats.pages_in_use == 0
+    assert peaks[False] == 2
+    assert peaks[True] >= 3, f"sharing should raise concurrency: {peaks}"
+
+
+# ---------------------------------------------------------------------------
+# sampled cohorts: copy-on-write fork, then bit-identical per-seed replay
+# ---------------------------------------------------------------------------
+
+
+def test_cow_fork_after_divergence_matches_unshared_replay(small_model):
+    cfg, model, params = small_model
+    gen = GenerationConfig(mode="dualcache", temperature=0.8,
+                           prompt_refresh_period=0, block_refresh_period=1,
+                           **GEN)
+    reqs = _dup_requests(cfg, 3, seed=2)
+    for i, r in enumerate(reqs):
+        r.sample_seed = 100 + i
+    sched = StreamScheduler(model, params, gen, max_slots=4,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            prefix_sharing=True, seed=0)
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
+    assert len(done) == 3
+    assert sched.stats.cow_forks == 2 * N_PROMPT_VP, \
+        "each follower must fork every shared prompt page exactly once"
+    assert sched.stats.pages_in_use == 0 and sched.stats.shared_mappings == 0
+    ref = np.asarray(make_engine(model, gen).generate(
+        params, jnp.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0),
+        sample_seeds=jnp.asarray([r.sample_seed for r in reqs])))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            r.output, ref[i, PROMPT_LEN:],
+            err_msg=f"post-fork replay diverged for request {i}")
+
+
+def test_unforked_cow_reserve_is_released_not_leaked(small_model):
+    """A 1-block sampled cohort never reaches a post-divergence refresh, so
+    the followers' CoW reserves are never consumed — dissolving the cohort
+    at retirement must release them (a leak here permanently shrinks the
+    pool)."""
+    cfg, model, params = small_model
+    gen = GenerationConfig(mode="dualcache", temperature=0.8,
+                           prompt_refresh_period=0, block_refresh_period=1,
+                           **GEN)
+    reqs = _dup_requests(cfg, 2, seed=4,
+                         max_new_tokens=GEN["block_length"])
+    for i, r in enumerate(reqs):
+        r.sample_seed = 7 + i
+    sched = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            prefix_sharing=True)
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
+    assert len(done) == 2 and sched.stats.cow_forks == 0
+    assert sched.stats.pages_in_use == 0, "unconsumed CoW reserves leaked"
+    assert not sched.cohorts
+    assert sched.allocator.free_pages == sched.allocator.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# page-aligned sparse eviction: reclaim, re-admit, stay bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_reclaims_pages_and_matches_dense_serving(small_model):
+    cfg, model, params = small_model
+    gen = _es_cfg(sparse_attention=True, sparse_retention=0.3)
+    rng = np.random.default_rng(3)
+    mk = lambda: [Request(prompt=rng.integers(3, cfg.vocab_size, PROMPT_LEN)
+                          .astype(np.int32)) for _ in range(4)]
+    reqs = mk()
+    paged = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS)
+    for r in reqs:
+        paged.submit(r)
+    done = paged.drain()
+    assert len(done) == 4
+    assert paged.stats.pages_reclaimed > 0, \
+        "sticky eviction must return fully-dead pages to the free list"
+    assert paged.stats.pages_in_use == 0
+
+    dense = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN)
+    reqs2 = [Request(prompt=r.prompt.copy()) for r in reqs]
+    for r in reqs2:
+        dense.submit(r)
+    dense.drain()
+    for a, b in zip(reqs, reqs2):
+        np.testing.assert_array_equal(
+            a.output, b.output,
+            err_msg="page-aligned eviction changed what a request decodes to")
+
+
+def test_reclaimed_pages_are_immediately_readmittable(small_model):
+    """A pool with no headroom for the second request: it can only be
+    admitted out of pages the first request's eviction returns mid-flight."""
+    cfg, model, params = small_model
+    gen = _es_cfg(sparse_attention=True, sparse_retention=0.2, gen_length=32)
+    n_vp_long = (PROMPT_LEN + 32) // PS                       # 6 pages
+    rng = np.random.default_rng(5)
+    long_req = Request(prompt=rng.integers(3, cfg.vocab_size, PROMPT_LEN)
+                       .astype(np.int32))
+    short_req = Request(prompt=rng.integers(3, cfg.vocab_size, 8)
+                        .astype(np.int32),
+                        max_new_tokens=GEN["block_length"])   # needs 2 pages
+    sched = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            kv_pages=n_vp_long + 2)           # 7 allocatable
+    sched.submit(long_req)
+    sched.submit(short_req)
+    for _ in range(600):
+        if not sched.has_work():
+            break
+        sched.step()
+    assert not sched.has_work(), \
+        "short request was never admitted: eviction did not return pages"
+    assert sched.stats.completed == 2
+    assert sched.stats.pages_reclaimed > 0
+    assert sched.stats.pages_in_use == 0
+    assert (short_req.output < cfg.vocab_size).all()

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Offline markdown link checker (stdlib only — CI-safe, no network).
+
+Checks every ``[text](target)`` and bare reference in the given markdown
+files:
+
+  * relative file links must point at an existing file or directory
+    (anchors are stripped; ``#anchor``-only links are checked against the
+    file's own headings);
+  * intra-repo anchors ``path.md#heading`` are validated against the target
+    file's headings using GitHub's slug rules (lowercase, spaces -> dashes,
+    punctuation dropped);
+  * absolute ``http(s)://`` links are NOT fetched (no network in CI) but
+    must at least parse (non-empty host).
+
+Exit code 1 with a per-link report if anything is broken, so the docs can't
+rot silently.
+
+    python tools/check_md_links.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub anchor slug: lowercase, strip punctuation, spaces -> dashes."""
+    h = re.sub(r"[`*_~]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {github_slug(m.group(1))
+            for m in HEADING_RE.finditer(path.read_text(encoding="utf-8"))}
+
+
+def check_file(path: Path) -> list[str]:
+    errors: list[str] = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        line = text[: m.start()].count("\n") + 1
+        where = f"{path}:{line}"
+        if target.startswith(("http://", "https://")):
+            if not re.match(r"https?://[\w.-]+", target):
+                errors.append(f"{where}: malformed URL {target!r}")
+            continue
+        if target.startswith("mailto:"):
+            continue
+        if target.startswith("#"):
+            if github_slug(target[1:]) not in anchors_of(path):
+                errors.append(f"{where}: missing in-page anchor {target!r}")
+            continue
+        rel, _, anchor = target.partition("#")
+        dest = (path.parent / rel).resolve()
+        if not dest.exists():
+            errors.append(f"{where}: broken relative link {target!r} "
+                          f"(resolved {dest})")
+            continue
+        if anchor and dest.is_file() and dest.suffix == ".md":
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{where}: anchor #{anchor} not found in {rel}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or [Path("README.md")]
+    missing = [f for f in files if not f.is_file()]
+    if missing:
+        print("not a file:", *missing, file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_links = sum(len(LINK_RE.findall(f.read_text(encoding="utf-8")))
+                  for f in files)
+    print(f"checked {n_links} links in {len(files)} files: "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
