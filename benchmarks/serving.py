@@ -33,6 +33,18 @@ identical rows write identical bytes, so shared scatters are idempotent.
 The costmodel's ``prefix_sharing_report`` gives the analytic concurrency
 bound the measurement should approach.
 
+A fifth pair of runs measures **per-row cadence + early block advance** (the
+mixed-mode engine step): parallel decoding (confidence threshold 0) makes
+every block complete in ONE iteration, so under the block-aligned scheduler
+a slot then idles out the rest of its 8-iteration cycle and arrivals wait
+for the next boundary.  The same Poisson trace is replayed through the paged
+scheduler at EQUAL pool bytes with ``early_advance`` off and on: with it on,
+a row advances its block the moment it unmasks, retires immediately, and
+admission happens on any iteration — goodput and p95 must strictly improve
+while per-request greedy outputs stay bit-identical (idle iterations after
+``blk_done`` never changed ``tokens``/``kv_valid``, so early advance only
+removes dead time).
+
 The harness entry (``benchmarks.run``) always writes ``BENCH_serving.json``
 next to the CWD so the perf trajectory accumulates per commit (the README
 documents every field); the CLI writes JSON only where ``--json`` points.
@@ -163,6 +175,41 @@ def _run_stream(bm, gcfg: GenerationConfig, reqs, arrivals, *,
     return out
 
 
+def _run_cadence(bm, gcfg: GenerationConfig, reqs, arrivals, *,
+                 early: bool, kv_pages: int) -> dict:
+    """Replay the trace through the paged scheduler with block-aligned or
+    early-advance cadence (equal pool bytes: same kv_pages)."""
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
+                            prompt_len=PROMPT_LEN, paged=True,
+                            page_size=PAGE_SIZE, kv_pages=kv_pages,
+                            early_advance=early)
+    sched.submit(Request(prompt=reqs[0].prompt.copy(),
+                         max_new_tokens=reqs[0].max_new_tokens))
+    sched.drain()                                   # warm the compile cache
+    pages_total = sched.stats.pages_total
+    sched.stats.__init__()
+    sched.stats.pages_total = pages_total
+    warm_steps = sched._step_count      # exclude warm-up from engine_steps —
+                                        # aligned mode burns ~8x more of them
+    makespan = _replay(sched.submit, sched.step,
+                       lambda: not sched.has_work(), arrivals, reqs)
+    lat = np.asarray(sched.stats.latencies_s)
+    return {
+        "early_advance": early,
+        "goodput": sched.stats.tokens_out / makespan,
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "makespan": makespan,
+        "completed": sched.stats.completed,
+        "engine_steps": sched._step_count - warm_steps,
+        "step_traces": sched.engine.step_trace_count,
+        "early_advances": sched.stats.early_advances,
+        "admission_wait_p50": sched.stats.admission_wait_p50,
+        "pages_total": pages_total,
+        "outputs": [r.output.tolist() for r in reqs],
+    }
+
+
 def _run_dup_prefix(bm, gcfg: GenerationConfig, *, sharing: bool) -> dict:
     """Burst of identical greedy 1-block requests at a pool sized for TWO
     unshared requests: admitted concurrency is purely page-gated, so the
@@ -240,6 +287,30 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
         bm.model.cfg, slots_dense=SLOTS, t_total=t_total,
         paged_tokens_mean=paged["mean_pages_in_use"] * PAGE_SIZE,
         pool_pages=SLOTS * n_vp + 1, page_size=PAGE_SIZE)
+    # per-row cadence: block-aligned vs early-advance at EQUAL pool bytes
+    # on a parallel-decoding workload (threshold 0 ⇒ one-iteration blocks,
+    # the maximal-dead-time regime the mixed-mode step exists for)
+    ea_cfg = gen_cfg(bm, "es", gen_length=GEN_LENGTH,
+                     block_length=BLOCK_LENGTH,
+                     parallel_decoding=True, pd_threshold=0.0)
+    ea_pages = SLOTS * n_vp + 1
+    reqs_al = _mk_requests(bm, n_requests, seed=0)
+    reqs_ea = _mk_requests(bm, n_requests, seed=0)
+    aligned = _run_cadence(bm, ea_cfg, reqs_al, arrivals,
+                           early=False, kv_pages=ea_pages)
+    early = _run_cadence(bm, ea_cfg, reqs_ea, arrivals,
+                         early=True, kv_pages=ea_pages)
+    # plain raise (survives python -O): the tentpole's soundness gate
+    if aligned.pop("outputs") != early.pop("outputs"):
+        raise RuntimeError(
+            "early advance changed greedy outputs (must be bit-identical)")
+    early_advance = {
+        "aligned": aligned,
+        "early": early,
+        "outputs_bit_identical": True,
+        "goodput_gain": early["goodput"] / max(aligned["goodput"], 1e-9),
+        "p95_gain": aligned["p95"] / max(early["p95"], 1e-9),
+    }
     # duplicate-prefix burst: sharing off vs on at EQUAL pool bytes
     dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
     dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
@@ -260,7 +331,8 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
             req_pages=n_vp_req, shared_pages=PROMPT_LEN // PAGE_SIZE),
     }
     return {"lockstep": lock, "stream": stream, "paged": paged,
-            "dup_prefix": dup, "kv": kv_report, "mean_interarrival_s": mean_ia}
+            "early_advance": early_advance, "dup_prefix": dup,
+            "kv": kv_report, "mean_interarrival_s": mean_ia}
 
 
 def _write_json(res: dict, path: str) -> None:
@@ -302,6 +374,17 @@ def run(rows: list) -> None:
         f"traces={paged['step_traces']} "
         f"kv_bytes_ratio={kv['kv_bytes_ratio']:.2f}x",
     ))
+    ea = res["early_advance"]
+    rows.append((
+        "serving/early_advance", dt * 1e6 / 4,
+        f"goodput={ea['aligned']['goodput']:.2f}->"
+        f"{ea['early']['goodput']:.2f}tok/s ({ea['goodput_gain']:.2f}x) "
+        f"p95={ea['aligned']['p95']:.2f}->{ea['early']['p95']:.2f}s "
+        f"({ea['p95_gain']:.2f}x) steps={ea['aligned']['engine_steps']}->"
+        f"{ea['early']['engine_steps']} "
+        f"early_advances={ea['early']['early_advances']} at equal pool "
+        f"bytes, outputs bit-identical",
+    ))
     dup = res["dup_prefix"]
     rows.append((
         "serving/dup_prefix", dt * 1e6 / 4,
@@ -339,6 +422,17 @@ def main() -> None:
           f"(= {SLOTS} dense slots' bytes), peak {paged['peak_pages_in_use']} "
           f"mean {paged['mean_pages_in_use']:.1f} pages, "
           f"KV bytes/iter {kv['kv_bytes_ratio']:.2f}x below dense")
+    ea = res["early_advance"]
+    print(f"early-advance (parallel decoding, equal pool bytes): goodput "
+          f"{ea['aligned']['goodput']:.2f} -> {ea['early']['goodput']:.2f} "
+          f"tok/s ({ea['goodput_gain']:.2f}x), p95 {ea['aligned']['p95']:.2f}"
+          f" -> {ea['early']['p95']:.2f}s ({ea['p95_gain']:.2f}x), engine "
+          f"steps {ea['aligned']['engine_steps']} -> "
+          f"{ea['early']['engine_steps']}, "
+          f"early_advances={ea['early']['early_advances']}, "
+          f"admission p50 {ea['aligned']['admission_wait_p50']*1e3:.0f} -> "
+          f"{ea['early']['admission_wait_p50']*1e3:.0f} ms, outputs "
+          f"bit-identical")
     dup = res["dup_prefix"]
     print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal pool "
           f"bytes): admitted concurrency "

@@ -25,9 +25,27 @@ different batch rows may sit on different blocks of their own requests.
 ``EngineState`` extends the per-block caches with per-slot counters and an
 ``active`` mask; ``step()`` is ONE jitted program that advances every slot by
 one denoising iteration regardless of which slots are prefilling, decoding,
-or idle.  Slots stay phase-aligned (admission happens on block boundaries —
-see runtime.scheduler), so the prefill/refresh cadence is a single traced
-branch index shared by all rows while ``bs`` stays per-row.
+or idle.
+
+The within-block cadence is per-row too: ``EngineState.phase`` is a ``[B]``
+vector, and every ``step()`` resolves each row's mode (prompt refresh /
+block refresh / skip decode / idle) from its own phase
+(``core.schedule.branch_index``).  The step executes up to three fused
+sub-programs — a skip-decode pass, a block-refresh pass, and a full-sequence
+prefill pass, each ``lax.cond``-gated on "any row in this mode" — with
+per-row masks: a pass's cache scatters are dropped for rows it does not own
+(dense: write-back of the carried row; paged: the write view of the block
+table is forced to -1 so the scatter clamps to the garbage page), and its
+confidence/prediction/indicator/kv_valid outputs merge per row.  Rows
+therefore progress at their own denoising rate: a row whose block fully
+unmasks can advance ``bs`` immediately (``early_advance=True``) instead of
+idling to a shared boundary, and a freshly admitted row enters in prefill
+mode (phase 0) on ANY iteration.  Per-request outputs are bit-identical to
+the block-aligned cadence: post-completion idle iterations never changed
+``tokens``/``kv_valid``, and the next block's prefill rebuilds every other
+cache from those, so early advance only removes dead time (the lifetime
+iteration counter jumps to ``blocks_done * steps_per_block`` at advance,
+exactly the offline ``generate()`` numbering).
 
 The mask token occupies the first padded-vocab slot (id == vocab_size), so it
 is embeddable but never sampled.
@@ -78,7 +96,12 @@ import numpy as np
 
 from repro.configs.base import GenerationConfig, ModelConfig
 from repro.core import sampler as smp
-from repro.core.schedule import Segment, resolve_segments
+from repro.core.schedule import (
+    Segment,
+    branch_index as resolve_branch_index,
+    prompt_refresh_pred as resolve_refresh_pred,
+    resolve_segments,
+)
 from repro.kernels import ops
 from repro.models.model import ForwardCtx, Model
 
@@ -99,10 +122,10 @@ class BlockState(NamedTuple):
 class EngineState(NamedTuple):
     """Slot-addressable serving state: BlockState fields + per-slot progress.
 
-    Every per-request quantity is a ``[B]`` vector indexed by slot; the
-    within-block iteration phase is a single scalar because the scheduler
-    aligns admission to block boundaries (all resident slots share the same
-    within-block cadence while sitting on *different* blocks).
+    Every per-request quantity is a ``[B]`` vector indexed by slot —
+    including the within-block iteration ``phase``: each row resolves its
+    own prefill/refresh/skip mode per step (mixed-mode cadence), so rows
+    may sit on different blocks AND different iterations of those blocks.
     """
     tokens: jax.Array        # [B, T]
     caches: Any
@@ -112,7 +135,7 @@ class EngineState(NamedTuple):
     kv_valid: jax.Array      # [B, T]
     bs: jax.Array            # [B] per-slot block offset (start of current block)
     blocks_left: jax.Array   # [B] blocks not yet completed (incl. current)
-    phase: jax.Array         # [] within-block iteration phase (shared cadence)
+    phase: jax.Array         # [B] per-slot within-block iteration phase
     iters: jax.Array         # [B] per-slot lifetime iteration counter
     active: jax.Array        # [B] bool — slot holds a live request
     key: jax.Array
@@ -153,6 +176,9 @@ class DiffusionEngine:
         page_size: int = 16,                 # tokens per KV page (paged only)
         kv_pages: int | None = None,         # pool pages incl. garbage page 0;
                                              # None => dense-equivalent sizing
+        early_advance: bool = False,         # serving: advance a row's block
+                                             # the moment it fully unmasks
+                                             # (else: shared-boundary advance)
     ):
         self.model = model
         self.cfg = model.cfg
@@ -171,9 +197,15 @@ class DiffusionEngine:
         self.paged = paged
         self.page_size = page_size if paged else 0
         self.kv_pages = kv_pages
+        self.early_advance = early_advance
         if paged:
             assert gen.mode != "vanilla", "paged KV needs a cached engine mode"
             assert page_size > 0
+            if attn_impl == "pallas":
+                # fail at construction, not deep inside a trace: the TPU
+                # kv_pos tiles need >= 128 lanes (interpret mode is exempt —
+                # ops re-checks at the call site where `interpret` resolves)
+                ops.validate_page_lanes(page_size, interpret=None)
         self._jit_run_block = jax.jit(self._run_block)   # compile once, reuse
         self._jit_step = jax.jit(self._engine_step)
         # donated pool: the fork updates pages in place instead of copying
@@ -426,21 +458,15 @@ class DiffusionEngine:
 
     def _prompt_refresh_pred(self, t):
         """Prompt-refresh predicate on a phase ``t`` — works on python ints
-        (host-side ``is_prompt_refresh``) and traced arrays
-        (``_branch_index``) alike, so there is exactly ONE cadence truth."""
-        pp = self.gen.prompt_refresh_period
-        r = t == 0
-        if pp > 0:
-            r |= (t % pp) == 0
-        return r
+        (host-side ``is_prompt_refresh``), numpy arrays (the scheduler's
+        per-slot ``prompt_refresh_rows``), and traced arrays
+        (``_branch_index``) alike, so there is exactly ONE cadence truth
+        (``core.schedule.prompt_refresh_pred``)."""
+        return resolve_refresh_pred(self.gen, t)
 
     def _branch_index(self, t: jax.Array) -> jax.Array:
-        bp = self.gen.block_refresh_period
-        prompt_r = self._prompt_refresh_pred(t)
-        block_r = jnp.zeros((), bool)
-        if bp > 0:
-            block_r = (t % bp) == 0
-        return jnp.where(prompt_r, 2, jnp.where(block_r, 1, 0)).astype(jnp.int32)
+        """Phase -> branch (elementwise: scalar offline, ``[B]`` serving)."""
+        return resolve_branch_index(self.gen, t)
 
     # ------------------------------------------------------------------
     # slot-based continuous serving (runtime.scheduler drives this)
@@ -467,7 +493,7 @@ class DiffusionEngine:
             hidden=bst.hidden, kv_valid=bst.kv_valid,
             bs=jnp.full((batch,), prompt_len, jnp.int32),
             blocks_left=jnp.zeros((batch,), jnp.int32),
-            phase=bst.t,
+            phase=jnp.zeros((batch,), jnp.int32),
             iters=jnp.zeros((batch,), jnp.int32),
             active=jnp.zeros((batch,), bool),
             key=bst.key,
@@ -517,6 +543,15 @@ class DiffusionEngine:
         ``_branch_index``, so the two cannot drift apart."""
         return bool(self._prompt_refresh_pred(int(phase)))
 
+    def prompt_refresh_rows(self, phases) -> np.ndarray:
+        """[B] bool — which slots' NEXT step is a prompt refresh, given the
+        per-slot phase vector.  The per-row successor of
+        ``is_prompt_refresh``: the scheduler keys CoW forks and eviction
+        reclaim on the rows this flags (a refresh scatters into THAT row's
+        prompt pages only), not on a global cadence."""
+        return np.asarray(self._prompt_refresh_pred(
+            np.asarray(phases, np.int64)))
+
     def dead_page_report(self, state: EngineState) -> np.ndarray:
         """[B, n_vpages] bool — mapped virtual pages every one of whose rows
         is dead (``kv_pos < 0``: sparse-evicted or pad) and that lie entirely
@@ -541,8 +576,92 @@ class DiffusionEngine:
              enc_out: Optional[jax.Array] = None) -> EngineState:
         """ONE denoising iteration for every resident slot — a single jitted
         program whose shape is independent of which slots are prefilling,
-        decoding, or idle (traced branch index + per-row masks)."""
+        refreshing, skip-decoding, or idle (per-row mode masks)."""
         return self._jit_step(params, state, enc_out)
+
+    def _merge_step_outputs(self, mask, old, new):
+        """Per-row merge of one mode pass's ``(caches, conf, pred, hidden,
+        kv_valid)`` into the carried tuple: rows in ``mask`` take the pass's
+        results, every other row keeps its carried state.
+
+        Cache leaves split two ways: self-attention KV was already
+        row-masked at the scatter (dense: write-back of the gathered old
+        row; paged: the write view of the block table clamps dead rows to
+        the garbage page), so the pass's KV is taken as-is — a per-row
+        select is impossible on the shared page pool anyway.  Every other
+        cache kind is batch-major ``[G, B, ...]`` and merges with a plain
+        per-row select (cross K/V and SSM snapshots are overwritten
+        wholesale by a pass, not scattered)."""
+        o_caches, o_conf, o_pred, o_hidden, o_kv = old
+        n_caches, n_conf, n_pred, n_hidden, n_kv = new
+        caches = n_caches
+        if o_caches != ():
+            caches = dict(n_caches)
+            for kind in ("cross", "ssm", "ssmh"):
+                if o_caches.get(kind):
+                    caches[kind] = jax.tree_util.tree_map(
+                        lambda o, n: jnp.where(
+                            mask.reshape((1, -1) + (1,) * (o.ndim - 2)), n, o),
+                        o_caches[kind], n_caches[kind])
+        m1 = mask[:, None]
+        return (
+            caches,
+            jnp.where(m1, n_conf, o_conf),
+            jnp.where(m1, n_pred, o_pred),
+            tuple(jnp.where(mask[:, None, None], n, o)
+                  for o, n in zip(o_hidden, n_hidden)),
+            jnp.where(m1, n_kv, o_kv),
+        )
+
+    def _mixed_step_outputs(self, params, state: EngineState, st: BlockState,
+                            enc_out):
+        """Mixed-mode compute for ONE serving iteration: every row resolves
+        its branch from its OWN phase, and up to three fused sub-programs run
+        — each gated by ``lax.cond`` on "any active row in this mode", each
+        masked to the rows it owns.  The carried ``(caches, conf, pred,
+        hidden, kv_valid)`` threads through the passes; their row sets are
+        disjoint, so order cannot matter semantically (passes read only
+        their own rows' cache state — attention never crosses rows, and
+        shared paged pages belong to cohorts whose rows share a phase)."""
+        bs = state.bs
+        br = self._branch_index(state.phase)                     # [B]
+        iters, seeds = state.iters, state.sample_seeds
+        prompt_start, bt = state.prompt_start, state.block_tables
+
+        def decode_pass(skip: bool, mask):
+            def run(carry):
+                sti = st._replace(caches=carry[0], conf=carry[1],
+                                  pred=carry[2], hidden=carry[3],
+                                  kv_valid=carry[4])
+                out = self._decode_step(params, bs, iters, seeds,
+                                        prompt_start, bt, sti, skip=skip,
+                                        row_mask=mask)
+                return self._merge_step_outputs(mask, carry, out)
+            return run
+
+        def prefill_pass(mask):
+            def run(carry):
+                sti = st._replace(caches=carry[0], conf=carry[1],
+                                  pred=carry[2], hidden=carry[3],
+                                  kv_valid=carry[4])
+                out = self._prefill_step(params, bs, iters, seeds,
+                                         prompt_start, bt, enc_out, sti,
+                                         row_mask=mask)
+                return self._merge_step_outputs(mask, carry, out)
+            return run
+
+        carry = (st.caches, st.conf, st.pred, st.hidden, st.kv_valid)
+        skip_rows = state.active & (br == 0)
+        noskip_rows = state.active & (br == 1)
+        refresh_rows = state.active & (br == 2)
+        carry = jax.lax.cond(jnp.any(skip_rows),
+                             decode_pass(True, skip_rows), lambda c: c, carry)
+        carry = jax.lax.cond(jnp.any(noskip_rows),
+                             decode_pass(False, noskip_rows), lambda c: c,
+                             carry)
+        carry = jax.lax.cond(jnp.any(refresh_rows),
+                             prefill_pass(refresh_rows), lambda c: c, carry)
+        return carry
 
     def _engine_step(self, params, state: EngineState, enc_out) -> EngineState:
         self.step_trace_count += 1        # python side effect: counts traces
@@ -552,26 +671,41 @@ class DiffusionEngine:
         bs = state.bs
         st = BlockState(state.tokens, state.caches, state.conf, state.pred,
                         state.hidden, state.kv_valid, state.phase, state.key)
-        outs = self._iteration_outputs(
-            params, st, bs, enc_out, iters=state.iters,
-            seeds=state.sample_seeds,
-            prompt_start=state.prompt_start, block_tables=state.block_tables)
+        if gen.mode == "vanilla":
+            conf, pred, st = self._vanilla_compute(
+                params, st, bs, enc_out, iters=state.iters,
+                seeds=state.sample_seeds)
+            outs = (st.caches, conf, pred, st.hidden, st.kv_valid)
+        else:
+            outs = self._mixed_step_outputs(params, state, st, enc_out)
         st = self._apply_unmask(st, bs, *outs, active=state.active)
 
-        phase = (state.phase + 1) % steps_pb
-        iters = state.iters + state.active.astype(jnp.int32)
+        phase_used = state.phase
+        phase = (phase_used + 1) % steps_pb
 
-        # block-boundary advancement: rows whose block fully unmasked move to
-        # their next block (or complete); shapes stay static — the boundary
-        # predicate just masks the update off on non-boundary iterations.
+        # per-row block advancement: a row whose block fully unmasked moves
+        # to its next block (or completes).  early_advance=True advances the
+        # moment the block is done (its phase resets to 0, so its next step
+        # prefills the new block — exactly the offline block-loop cadence);
+        # early_advance=False defers to the row's own phase wrap, matching
+        # the block-aligned scheduler.  Shapes stay static either way — the
+        # predicate just masks the update off.
         blk_tok = _row_gather(st.tokens, self._block_cols(bs))
         blk_done = ~jnp.any(blk_tok == self.mask_id, axis=1)
-        boundary = phase == 0
-        adv = state.active & blk_done & boundary
+        adv = state.active & blk_done
+        if not self.early_advance:
+            adv &= phase == 0
         blocks_left = state.blocks_left - adv.astype(jnp.int32)
         finished = adv & (blocks_left == 0)
         new_bs = jnp.where(adv & ~finished, bs + lb, bs)
         active = state.active & ~finished
+        phase = jnp.where(adv, 0, phase)
+        # lifetime draw-key numbering matches offline generate(): block blk
+        # starts at blk * steps_pb, so an advance JUMPS the counter there —
+        # the iterations early advance skips were no-ops with no draws.
+        iters = jnp.where(
+            adv, state.iters - phase_used + steps_pb,
+            state.iters + state.active.astype(jnp.int32))
 
         return EngineState(
             tokens=st.tokens, caches=st.caches, conf=st.conf, pred=st.pred,
@@ -599,10 +733,20 @@ class DiffusionEngine:
         )
 
     def _prefill_step(self, params, bs, iters, seeds, prompt_start,
-                      block_tables, enc_out, st: BlockState):
+                      block_tables, enc_out, st: BlockState,
+                      row_mask: Optional[jax.Array] = None):
         """Full forward over the whole sequence: (re)builds every cache and
         the block's confidence/prediction/indicator caches (cache init &
         prompt refresh — paper §5.2 last paragraph).
+
+        ``row_mask`` [B] marks the rows this pass OWNS under mixed-mode
+        cadence (None = all rows, the offline/phase-aligned path): other
+        rows still flow through the fused program — identical shapes, one
+        compiled step — but their cache scatters are dropped
+        (``ForwardCtx.scatter_mask``) and the caller merges their outputs
+        away.  With a mask the carried caches are NOT zeroed: the refresh
+        scatter covers every position of an owned row anyway, and zeroing
+        would destroy the other rows' live cache state.
 
         Pad prompt rows (pos < prompt_start) are computed but masked out of
         every attention read (``kv_pos < 0``) and — in paged mode — never
@@ -629,10 +773,13 @@ class DiffusionEngine:
 
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
-        # zeroing the WHOLE pool is correct in paged mode too: the prefill
-        # cadence is phase-aligned, so every resident slot rebuilds its pages
-        # in this same pass (idle slots write only the garbage page)
-        caches = jax.tree_util.tree_map(jnp.zeros_like, st.caches)
+        caches = st.caches
+        if row_mask is None:
+            # phase-aligned path: every row rebuilds in this same pass, so
+            # zeroing the whole cache (pool included) is correct; under a
+            # row mask the other rows' cache state must survive, and the
+            # refresh scatter rewrites every owned position regardless
+            caches = jax.tree_util.tree_map(jnp.zeros_like, caches)
         if self.cache_shardings is not None:
             caches = jax.tree_util.tree_map(
                 jax.lax.with_sharding_constraint, caches, self.cache_shardings
@@ -642,6 +789,7 @@ class DiffusionEngine:
             "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
             block_start=bs, enc_out=enc_out,
             block_tables=block_tables, page_size=self.page_size,
+            scatter_mask=row_mask,
         )
         hidden = []
         for seg in self.segments:
@@ -664,11 +812,15 @@ class DiffusionEngine:
         return caches, conf, pred, tuple(hidden), kv_valid
 
     def _decode_step(self, params, bs, iters, seeds, prompt_start,
-                     block_tables, st: BlockState, *, skip: bool):
+                     block_tables, st: BlockState, *, skip: bool,
+                     row_mask: Optional[jax.Array] = None):
         """One diffusion iteration on the current block (paper Alg. 1).
 
         ``skip=True`` applies the early-skip schedule; ``skip=False`` is the
-        block-refresh variant (all rows computed, caches fully updated)."""
+        block-refresh variant (all rows computed, caches fully updated).
+        ``row_mask`` [B] marks the rows this pass owns under mixed-mode
+        cadence (None = all): unowned rows compute but their KV scatters
+        are dropped and the caller discards their outputs."""
         model, gen = self.model, self.gen
         b, t_total = st.tokens.shape
         lb = gen.block_length
@@ -686,6 +838,7 @@ class DiffusionEngine:
                 "decode", bs[:, None] + s_idx, kv_pos=kv_pos,
                 slot_idx=bs[:, None] + s_idx, block_idx=s_idx,
                 block_tables=block_tables, page_size=self.page_size,
+                scatter_mask=row_mask,
             )
             out = model.run_layers(params, h, ctx, caches,
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)

@@ -5,6 +5,14 @@ A *segment* is a contiguous range of scan groups executed in one
 set shrinks to the top-k rows by importance (paper Alg. 1 line 13).  Skip
 layers are rounded to the architecture's pattern-group boundaries
 (DESIGN §8) since the stack scans over groups.
+
+This module also owns the **within-block cadence truth**: which denoising
+iteration runs which program.  ``prompt_refresh_pred`` / ``branch_index``
+operate elementwise on python ints, numpy arrays, and traced jax arrays
+alike, so the host-side scheduler (per-slot CoW-fork / reclaim keying), the
+offline block loop (scalar phase), and the mixed-mode serving step (per-row
+``phase [B]`` — every row resolves its own segment plan for the iteration)
+can never drift apart.
 """
 from __future__ import annotations
 
@@ -12,6 +20,33 @@ import dataclasses
 import math
 
 from repro.configs.base import GenerationConfig, ModelConfig, SkipStage
+
+
+def prompt_refresh_pred(gen: GenerationConfig, t):
+    """Whether iteration phase ``t`` is a prompt refresh (cache init at
+    ``t == 0``, plus every ``prompt_refresh_period`` iterations).  ``t`` may
+    be a python int, a numpy array, or a traced jax array — the arithmetic
+    is elementwise, so a per-row ``[B]`` phase vector yields a per-row
+    predicate."""
+    pp = gen.prompt_refresh_period
+    r = t == 0
+    if pp > 0:
+        r = r | ((t % pp) == 0)
+    return r
+
+
+def branch_index(gen: GenerationConfig, t):
+    """Iteration phase -> branch: 2 = prompt refresh (full-sequence
+    prefill), 1 = block refresh (all block rows computed), 0 = skip decode
+    (the early-skip segment plan).  Elementwise like
+    :func:`prompt_refresh_pred`: a ``[B]`` phase vector maps to the per-row
+    mode vector the mixed-mode engine step masks its fused programs with."""
+    import jax.numpy as jnp
+
+    prompt_r = prompt_refresh_pred(gen, t)
+    bp = gen.block_refresh_period
+    block_r = (t % bp) == 0 if bp > 0 else (t != t)
+    return jnp.where(prompt_r, 2, jnp.where(block_r, 1, 0)).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)

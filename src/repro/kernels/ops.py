@@ -44,6 +44,26 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def validate_page_lanes(page_size: int, *, interpret: bool | None) -> None:
+    """Real-TPU guard for the paged kernels: the kv_pos / page tiles put
+    ``page_size`` on the 128-wide lane dimension, so a pool compiled through
+    Mosaic needs ``page_size >= 128`` (and a multiple of 128 to avoid
+    padding waste).  Interpret mode (CPU tests) is exempt — it runs the
+    kernel body without lane tiling.  ``interpret=None`` resolves the same
+    way the kernel call sites do: interpret on CPU, compiled elsewhere."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if interpret:
+        return
+    if page_size < 128 or page_size % 128 != 0:
+        raise ValueError(
+            f"page_size={page_size} cannot compile for real TPU: the paged "
+            f"Pallas kernels tile page_size on the 128-wide lane dimension, "
+            f"so it must be a multiple of 128 (>= 128). Use page_size=128 "
+            f"(or a larger multiple), or run with interpret=True / "
+            f"impl='xla' for small-page CPU testing.")
+
+
 # ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
@@ -305,6 +325,7 @@ def _paged_attention_pallas(q, k_pool, v_pool, q_pos, kv_pos, block_tables, *,
     b, hq, lq, d = q.shape
     ps = k_pool.shape[1]
     assert ps % 8 == 0, "page_size must be a multiple of 8 for the TPU kernel"
+    validate_page_lanes(ps, interpret=interpret)
     bq = min(block_q, _round_up(lq, 8))
     lq_p = _round_up(lq, bq)
     d_p = _round_up(d, 128)
@@ -452,10 +473,24 @@ def scatter_rows(
     new: jax.Array,     # [B, K, ...]
     idx: jax.Array,     # [B, K] int32
     *,
+    row_mask: jax.Array | None = None,   # [B] bool: False rows scatter no-ops
     impl: Impl = "xla",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """cache[b, idx[b, k]] = new[b, k] (per-batch row scatter)."""
+    """cache[b, idx[b, k]] = new[b, k] (per-batch row scatter).
+
+    ``row_mask`` (mixed-mode cadence) turns unowned rows' updates into exact
+    no-ops by replacing their fresh values with the carried cache rows — a
+    gather-merge on the ``[B, K, ...]`` update, far cheaper than selecting
+    over the whole cache, and it works unchanged through the Pallas kernel.
+    """
+    if row_mask is not None:
+        b, k = idx.shape
+        old = jnp.take_along_axis(
+            cache.reshape(b, cache.shape[1], -1), idx[..., None], axis=1)
+        new = jnp.where(row_mask[:, None, None],
+                        new.reshape(b, k, -1).astype(cache.dtype),
+                        old).reshape(new.shape).astype(new.dtype)
     if impl == "pallas":
         shape = cache.shape
         c4 = cache.reshape(shape[0], shape[1], 1, -1) if cache.ndim != 4 else cache
@@ -478,16 +513,23 @@ def scatter_rows_paged(
     block_tables: jax.Array,  # [B, n_vpages] int32 page ids, -1 unmapped
     *,
     page_size: int,
+    row_mask: jax.Array | None = None,   # [B] bool: False rows -> garbage page
     impl: Impl = "xla",
     interpret: bool | None = None,
 ) -> jax.Array:
     """pool[bt[b, idx//ps], idx%ps] = new[b, k] (block-table row scatter).
 
     Rows whose virtual page is unmapped (bt < 0) land on the reserved garbage
-    page 0 — never read back because readers mask ``kv_pos < 0`` there."""
+    page 0 — never read back because readers mask ``kv_pos < 0`` there.
+    ``row_mask`` (mixed-mode cadence) reuses exactly that drain: unowned
+    rows see an all-unmapped WRITE view of their block-table row, so both
+    the XLA and the Pallas lowering drop them without a new code path."""
     ps = page_size
     assert pool.shape[1] == ps
+    if row_mask is not None:
+        block_tables = jnp.where(row_mask[:, None], block_tables, -1)
     if impl == "pallas":
+        validate_page_lanes(ps, interpret=interpret)
         shape = pool.shape
         p4 = pool.reshape(shape[0], shape[1], 1, -1) if pool.ndim != 4 else pool
         n4 = new.reshape(new.shape[0], new.shape[1], 1, -1) if new.ndim != 4 else new
@@ -530,6 +572,7 @@ def fork_pages(
     g, p, ps = pool.shape[:3]
     assert src.shape == dst.shape and src.ndim == 1
     if impl == "pallas":
+        validate_page_lanes(ps, interpret=interpret)
         p4 = pool.reshape(g, p, ps, -1)
         out = fork_pages_kernel(
             p4, src, dst,
@@ -570,6 +613,7 @@ __all__ = [
     "paged_attention",
     "gather_pages",
     "paged_kv_mask",
+    "validate_page_lanes",
     "ssd",
     "scatter_rows",
     "scatter_rows_paged",

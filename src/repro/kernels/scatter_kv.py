@@ -11,6 +11,16 @@ The paged variant routes through a per-slot block table on top of the same
 trick: destination = (physical page, in-page offset) computed from TWO
 prefetched scalar arrays (row indices + block table).
 
+Mixed-mode cadence (per-row phase) needs scatters that DROP dead rows —
+rows a fused pass does not own must not update their cache.  Neither kernel
+grows a mask argument for this: the paged kernel already routes unmapped
+(``bt < 0``) rows to the garbage page, so ``ops.scatter_rows_paged`` hands
+it a write view of the block table with unowned rows forced to -1; the
+dense kernel scatters whatever values it is given, so ``ops.scatter_rows``
+gather-merges the carried cache rows into the update first (an unowned
+row's scatter writes back its own old bytes — an exact no-op).  One
+compiled program serves every mode mix either way.
+
 ``fork_pages_kernel`` is the third member of the family: the copy-on-write
 fork of prefix page sharing (memory manager v2).  It copies whole physical
 pages ``src[f] -> dst[f]`` inside the pool — both the *input* and the

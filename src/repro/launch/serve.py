@@ -40,6 +40,12 @@ def main() -> None:
     ap.add_argument("--block-length", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--parallel-decoding", action="store_true")
+    ap.add_argument("--early-advance", action="store_true",
+                    help="per-row cadence: a slot advances its block the "
+                         "moment it fully unmasks and admission happens on "
+                         "any iteration (stream runtime only; pairs with "
+                         "--parallel-decoding, which makes block completion "
+                         "time variable)")
     ap.add_argument("--stream-print", action="store_true",
                     help="print each request's blocks as they unmask")
     ap.add_argument("--paged", action="store_true",
@@ -82,7 +88,8 @@ def main() -> None:
                                  prompt_len=args.prompt_len, stream_cb=stream_cb,
                                  paged=args.paged, page_size=args.page_size,
                                  kv_pages=args.kv_pages,
-                                 prefix_sharing=args.prefix_sharing)
+                                 prefix_sharing=args.prefix_sharing,
+                                 early_advance=args.early_advance)
     else:
         server = BatchServer(model, params, gen, batch_size=args.batch,
                              prompt_len=args.prompt_len)
@@ -104,7 +111,10 @@ def main() -> None:
             f"wall={server.stats.wall_s:.2f}s")
     if args.runtime == "stream":
         line += (f"  p50={server.stats.latency_pct(50):.2f}s"
-                 f"  p95={server.stats.latency_pct(95):.2f}s")
+                 f"  p95={server.stats.latency_pct(95):.2f}s"
+                 f"  admission_p50={server.stats.admission_wait_p50:.3f}s")
+        if args.early_advance:
+            line += f"  early_advances={server.stats.early_advances}"
         if args.paged:
             line += (f"  peak_pages={server.stats.peak_pages_in_use}"
                      f"/{server.stats.pages_total}"

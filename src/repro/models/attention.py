@@ -124,8 +124,15 @@ def self_attention(
     anchor: int = 0,
     attn_impl: str = "xla",
     use_rope: bool = True,
+    scatter_mask: Optional[jax.Array] = None,   # [B] rows whose scatters land
 ) -> tuple[jax.Array, Optional[KVCache | PagedKVCache]]:
-    """Returns (output [B, K, d], updated cache or None)."""
+    """Returns (output [B, K, d], updated cache or None).
+
+    ``scatter_mask`` (mixed-mode cadence) drops the cache update for rows a
+    pass does not own: dense caches write back the carried row, the paged
+    pool routes unowned rows to the garbage page.  Attention reads are
+    unmasked — unowned rows still compute (one fused program), their
+    outputs are discarded one level up."""
     b, k, _ = x.shape
     q, kk, vv = _project_qkv(params, cfg, x, positions, rope=use_rope)
 
@@ -134,6 +141,7 @@ def self_attention(
         return _paged_self_attention(
             params, q, kk, vv, cache, positions, slot_idx, kv_pos,
             causal=causal, window=window, anchor=anchor, attn_impl=attn_impl,
+            scatter_mask=scatter_mask,
         )
 
     k_scale = v_scale = None
@@ -143,16 +151,20 @@ def self_attention(
             k8, ks = _quantize_rows(kk)
             v8, vs = _quantize_rows(vv)
             cache = KVCache(
-                ops.scatter_rows(cache.k, k8, slot_idx),
-                ops.scatter_rows(cache.v, v8, slot_idx),
-                ops.scatter_rows(cache.k_scale, ks, slot_idx),
-                ops.scatter_rows(cache.v_scale, vs, slot_idx),
+                ops.scatter_rows(cache.k, k8, slot_idx, row_mask=scatter_mask),
+                ops.scatter_rows(cache.v, v8, slot_idx, row_mask=scatter_mask),
+                ops.scatter_rows(cache.k_scale, ks, slot_idx,
+                                 row_mask=scatter_mask),
+                ops.scatter_rows(cache.v_scale, vs, slot_idx,
+                                 row_mask=scatter_mask),
             )
             k_scale, v_scale = cache.k_scale, cache.v_scale
         else:
             cache = KVCache(
-                ops.scatter_rows(cache.k, kk.astype(cache.k.dtype), slot_idx),
-                ops.scatter_rows(cache.v, vv.astype(cache.v.dtype), slot_idx),
+                ops.scatter_rows(cache.k, kk.astype(cache.k.dtype), slot_idx,
+                                 row_mask=scatter_mask),
+                ops.scatter_rows(cache.v, vv.astype(cache.v.dtype), slot_idx,
+                                 row_mask=scatter_mask),
             )
         k_full, v_full, kv_positions = cache.k, cache.v, kv_pos
     else:
@@ -179,28 +191,36 @@ def self_attention(
 
 def _paged_self_attention(
     params, q, kk, vv, cache: PagedKVCache, positions, slot_idx, kv_pos,
-    *, causal, window, anchor, attn_impl,
+    *, causal, window, anchor, attn_impl, scatter_mask=None,
 ) -> tuple[jax.Array, PagedKVCache]:
-    """Scatter fresh rows through the block table, attend the page pool."""
+    """Scatter fresh rows through the block table, attend the page pool.
+
+    ``scatter_mask`` drops unowned rows' writes by handing the scatter a
+    write view of the block table with those rows forced to -1 (unmapped ⇒
+    garbage page) — reads keep the real table."""
     b, k = slot_idx.shape
     pool, bt, ps = cache.cache, cache.block_tables, cache.page_size
     if pool.quantized:
         k8, ks = _quantize_rows(kk)
         v8, vs = _quantize_rows(vv)
         pool = KVCache(
-            ops.scatter_rows_paged(pool.k, k8, slot_idx, bt, page_size=ps),
-            ops.scatter_rows_paged(pool.v, v8, slot_idx, bt, page_size=ps),
-            ops.scatter_rows_paged(pool.k_scale, ks, slot_idx, bt, page_size=ps),
-            ops.scatter_rows_paged(pool.v_scale, vs, slot_idx, bt, page_size=ps),
+            ops.scatter_rows_paged(pool.k, k8, slot_idx, bt, page_size=ps,
+                                   row_mask=scatter_mask),
+            ops.scatter_rows_paged(pool.v, v8, slot_idx, bt, page_size=ps,
+                                   row_mask=scatter_mask),
+            ops.scatter_rows_paged(pool.k_scale, ks, slot_idx, bt,
+                                   page_size=ps, row_mask=scatter_mask),
+            ops.scatter_rows_paged(pool.v_scale, vs, slot_idx, bt,
+                                   page_size=ps, row_mask=scatter_mask),
         )
         k_scale, v_scale = pool.k_scale, pool.v_scale
     else:
         k_scale = v_scale = None
         pool = KVCache(
             ops.scatter_rows_paged(pool.k, kk.astype(pool.k.dtype), slot_idx,
-                                   bt, page_size=ps),
+                                   bt, page_size=ps, row_mask=scatter_mask),
             ops.scatter_rows_paged(pool.v, vv.astype(pool.v.dtype), slot_idx,
-                                   bt, page_size=ps),
+                                   bt, page_size=ps, row_mask=scatter_mask),
         )
     out = ops.paged_attention(
         jnp.swapaxes(q, 1, 2),

@@ -68,6 +68,9 @@ class ForwardCtx:
     block_start: Optional[jax.Array] = None   # [B] dynamic block start (prefill)
     block_tables: Optional[jax.Array] = None  # [B, n_vpages] paged-KV page map
     page_size: int = 0                        # static; > 0 => KV caches are paged
+    scatter_mask: Optional[jax.Array] = None  # [B] rows whose KV scatters land
+                                              # (mixed-mode cadence: a pass
+                                              # drops rows it does not own)
     enc_out: Optional[jax.Array] = None       # [B, E, d_enc]
     causal: bool = False
     window_override: int = 0                  # long-context windowed variant
@@ -393,7 +396,7 @@ class Model:
                 cache=kv_cache,
                 slot_idx=ctx.slot_idx, kv_pos=ctx.kv_pos,
                 causal=ctx.causal, window=window, anchor=ctx.anchor,
-                attn_impl=ctx.attn_impl,
+                attn_impl=ctx.attn_impl, scatter_mask=ctx.scatter_mask,
             )
             h = h + a
             if isinstance(new_kv, PagedKVCache):

@@ -5,11 +5,17 @@ together), the scheduler drives ``DiffusionEngine.step`` — ONE compiled
 program advancing every resident slot by one denoising iteration — and does
 all control flow host-side:
 
-* **slot admission** from a FIFO queue at block boundaries (the engine keeps
-  slots phase-aligned, so a boundary is the only point where a freshly
-  admitted slot can join the shared prefill/refresh cadence);
-* **slot recycling** the moment a request's last block completes, so a long
-  request never stalls short ones behind it;
+* **slot admission** from a FIFO queue.  The engine's cadence is per-row
+  (``EngineState.phase [B]``, mixed-mode step), so with
+  ``early_advance=True`` admission happens on ANY iteration — a fresh slot
+  enters at phase 0 and its next step prefills it while resident slots keep
+  decoding.  ``early_advance=False`` keeps the block-aligned contract
+  (admission only when every slot sits at phase 0, block advance only at
+  the shared boundary) — bit-identical serving either way, the aligned mode
+  just inserts dead iterations;
+* **slot recycling** the moment a request's last block completes — with
+  ``early_advance=True`` that is the very iteration the block unmasks, not
+  the end of a cycle — so a long request never stalls short ones behind it;
 * **per-request streaming** of completed (fully unmasked) blocks through
   ``Request.stream_cb`` / a scheduler-wide callback;
 * **stats**: per-request latency/TPS and aggregate goodput — completed
@@ -83,11 +89,20 @@ class SchedulerStats:
     cow_forks: int = 0                   # pages copied by copy-on-write forks
     pages_reclaimed: int = 0             # pages returned early by page-aligned eviction
     resident_peak: int = 0               # max concurrently admitted requests
+    early_advances: int = 0              # block advances before the aligned boundary
+    admission_waits: list = dataclasses.field(default_factory=list)
+                                         # per-request queue wait (arrival -> admit)
 
     @property
     def goodput(self) -> float:
         """Completed tokens per wall second (aggregate serving metric)."""
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def admission_wait_p50(self) -> float:
+        if not self.admission_waits:
+            return 0.0
+        return float(np.percentile(np.asarray(self.admission_waits), 50))
 
     def gauges(self) -> dict:
         """Point-in-time gauge snapshot (the monitoring-surface dict)."""
@@ -99,6 +114,8 @@ class SchedulerStats:
             "cow_forks": self.cow_forks,
             "pages_reclaimed": self.pages_reclaimed,
             "resident_peak": self.resident_peak,
+            "early_advances": self.early_advances,
+            "admission_wait_p50": self.admission_wait_p50,
         }
 
     # BatchServer.stats compatibility
@@ -225,6 +242,8 @@ class StreamScheduler:
         page_size: int = 16,
         kv_pages: Optional[int] = None,     # None => dense-equivalent pool
         prefix_sharing: bool = False,       # CoW prompt-page dedup (paged only)
+        early_advance: bool = False,        # per-row cadence: any-iteration
+                                            # admission + immediate block advance
         **engine_kw,
     ):
         assert gen.gen_length % gen.block_length == 0
@@ -241,6 +260,8 @@ class StreamScheduler:
         assert not (prefix_sharing and not paged), \
             "prefix_sharing shares pool pages — it requires paged=True"
         self.prefix_sharing = prefix_sharing
+        self.early_advance = early_advance
+        engine_kw.setdefault("early_advance", early_advance)
         t_total = prompt_len + gen.gen_length
         self.allocator: Optional[PageAllocator] = None
         if paged:
@@ -329,8 +350,11 @@ class StreamScheduler:
         return first_vp, last_vp, last_vp - first_vp
 
     def _admit(self) -> None:
-        """Fill free slots from the queue (cycle-boundary only: the engine
-        phase is 0, so the next step prefills the fresh slots' caches).
+        """Fill free slots from the queue.  An admitted slot's phase is set
+        to 0, so the next step prefills its caches — under per-row cadence
+        that works on ANY iteration (``early_advance=True`` calls this every
+        step); block-aligned mode calls it only when every slot sits at
+        phase 0, preserving the shared cadence.
 
         In paged mode admission is additionally page-availability-gated:
         the queue head waits (FIFO, no overtaking) until retirements return
@@ -400,6 +424,7 @@ class StreamScheduler:
                 tokens=st.tokens.at[slot].set(row),
                 bs=st.bs.at[slot].set(self.prompt_len),
                 blocks_left=st.blocks_left.at[slot].set(n_blocks),
+                phase=st.phase.at[slot].set(0),
                 iters=st.iters.at[slot].set(0),
                 kv_valid=st.kv_valid.at[slot].set(True),
                 active=st.active.at[slot].set(True),
@@ -450,6 +475,7 @@ class StreamScheduler:
                     self.engine.attn_impl)
                 self._enc_out = self._enc_out.at[slot].set(enc[0])
             req.admit_s = now
+            self.stats.admission_waits.append(now - req.arrival_s)
             self.slot_req[slot] = req
             self.slot_streamed[slot] = 0
         self.state = st
@@ -469,26 +495,45 @@ class StreamScheduler:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
 
     def step(self) -> bool:
-        """One engine iteration (+ boundary bookkeeping).  Returns False and
-        does nothing when there is neither queued nor resident work."""
+        """One engine iteration (+ bookkeeping).  Returns False and does
+        nothing when there is neither queued nor resident work.
+
+        Per-row cadence: admission, the CoW-fork / reclaim hooks, and
+        completion bookkeeping all key on the per-slot phase vector.  With
+        ``early_advance=False`` the phases stay mutually aligned (admission
+        and advancement only happen when every slot wraps together), so the
+        behavior reduces exactly to the old block-aligned scheduler."""
         t0 = self.clock()           # admission work (incl. encode) is wall time
-        phase = int(self.state.phase)
-        if phase == 0:
+        phases = np.asarray(self.state.phase)
+        if self.early_advance or bool((phases == 0).all()):
             self._admit()
-        if not any(r is not None for r in self.slot_req):
+            phases = np.asarray(self.state.phase)
+        resident = np.asarray([r is not None for r in self.slot_req])
+        if not resident.any():
             return False
-        # the upcoming step is a prompt refresh — the only branch that
-        # scatters into prompt pages — per the engine's own cadence
-        refresh = self.engine.is_prompt_refresh(phase)
-        if self.paged and refresh:
-            self._cow_fork_before_refresh()
+        # rows whose upcoming step is a prompt refresh — the only branch
+        # that scatters into THAT row's prompt pages — per the engine's own
+        # per-row cadence
+        refresh_rows = self.engine.prompt_refresh_rows(phases) & resident
+        if self.paged and refresh_rows.any():
+            self._cow_fork_before_refresh(refresh_rows)
+        pre_blocks_left = np.asarray(self.state.blocks_left)
         self.state = self.engine.step(self.params, self.state, self._enc_out)
         jax.block_until_ready(self.state.tokens)
         self._step_count += 1
         self.stats.wall_s += self.clock() - t0
-        if self.paged and self.gen.sparse_attention and refresh:
-            self._reclaim_dead_pages()
-        if int(self.state.phase) == 0:
+        if self.paged and self.gen.sparse_attention and refresh_rows.any():
+            self._reclaim_dead_pages(refresh_rows)
+        if self.early_advance:
+            adv = (np.asarray(self.state.blocks_left) < pre_blocks_left) \
+                & resident
+            steps_pb = self.gen.resolved_steps()
+            self.stats.early_advances += int(
+                (adv & ((phases + 1) % steps_pb != 0)).sum())
+            # streams / retires per iteration: a finished row's slot is free
+            # for the very next admission, not for the end of a cycle
+            self._finish_cycle()
+        elif bool((np.asarray(self.state.phase) == 0).all()):
             self._finish_cycle()
         return True
 
@@ -505,14 +550,22 @@ class StreamScheduler:
         cohort["reserve"] = {}
         self.cohorts.remove(cohort)
 
-    def _cow_fork_before_refresh(self) -> None:
-        """Copy-on-write: the upcoming refresh scatters recomputed prompt
-        K/V into every mapped page.  Greedy cohorts stay bit-identical, so
-        every sharer rewrites identical bytes and sharing persists; sampled
-        cohorts diverged at their first draw, so each follower forks the
-        shared pages onto its admission-time reserve and repoints its block
-        table BEFORE the refresh can scatter diverged content into a
-        refcount>1 page.
+    def _cow_fork_before_refresh(self, refresh_rows) -> None:
+        """Copy-on-write: an upcoming refresh scatters recomputed prompt
+        K/V into the refreshing row's mapped pages.  Greedy cohorts stay
+        bit-identical (identical trajectories ⇒ identical per-row phases ⇒
+        identical bytes), so sharing persists; sampled cohorts diverged at
+        their first draw, so the shared pages must be forked BEFORE any
+        diverged content reaches a refcount>1 page.
+
+        ``refresh_rows`` [B] is the per-row refresh predicate for THIS step
+        (``engine.prompt_refresh_rows``) — the re-keyed successor of the
+        old global ``is_prompt_refresh(phase)``.  Under per-row cadence a
+        cohort's members can refresh on different iterations, and the
+        OWNER's refresh corrupts followers' reads exactly like a follower's
+        own write would — so the first post-divergence step on which ANY
+        member is about to refresh forks ALL followers onto their
+        admission-time reserves and repoints their block tables.
 
         Under this fork-before-refresh policy the fork's data copy is
         belt-and-suspenders: the refresh about to run rewrites every row of
@@ -529,6 +582,8 @@ class StreamScheduler:
         for cohort in list(self.cohorts):
             if self._step_count <= cohort["born"]:
                 continue            # the admission prefill itself: no draws yet
+            if not any(refresh_rows[s] for s in cohort["slots"]):
+                continue            # nobody in this cohort refreshes this step
             for slot in [s for s in cohort["slots"] if s != cohort["owner"]]:
                 mapping = [(vp, pg) for vp, pg in cohort["slots"][slot]
                            if bt[slot, vp] == pg]    # eviction may have unmapped
@@ -559,12 +614,19 @@ class StreamScheduler:
         self.stats.shared_mappings = self.allocator.shared_mappings
         self.stats.pages_in_use = self.allocator.used_pages
 
-    def _reclaim_dead_pages(self) -> None:
+    def _reclaim_dead_pages(self, refresh_rows) -> None:
         """Page-aligned sparse eviction: after a refresh re-scored the
         retention sets, unmap every fully-dead page behind each slot's
         current block and return it to the free list — freed capacity is
-        immediately admittable instead of masked-but-resident."""
-        dead = self.engine.dead_page_report(self.state)
+        immediately admittable instead of masked-but-resident.
+
+        Scans only ``refresh_rows``: a row's dead set can change only at
+        its own refresh (that is also when its ``bs`` has just advanced and
+        settled new pages), so under per-row cadence the other slots'
+        host-side bookkeeping is skipped — in aligned mode every resident
+        row refreshes together and this reduces to the full scan."""
+        dead = self.engine.dead_page_report(self.state) \
+            & np.asarray(refresh_rows, bool)[:, None]
         if not dead.any():
             return
         bt = np.array(self.state.block_tables)
@@ -591,8 +653,10 @@ class StreamScheduler:
         self.stats.shared_mappings = self.allocator.shared_mappings
 
     def _finish_cycle(self) -> None:
-        """Post-boundary bookkeeping: stream newly completed blocks, retire
-        finished requests, recycle their slots."""
+        """Post-step bookkeeping: stream newly completed blocks, retire
+        finished requests, recycle their slots.  Runs after every iteration
+        under ``early_advance`` (a block can complete on any step) and only
+        at the shared boundary in block-aligned mode."""
         tokens = np.asarray(self.state.tokens)
         blocks_left = np.asarray(self.state.blocks_left)
         active = np.asarray(self.state.active)

@@ -198,6 +198,47 @@ def block_state_pspecs(state: Any, mesh: Mesh, *, paged: bool = False) -> Any:
     )
 
 
+def engine_state_pspecs(state: Any, mesh: Mesh, *, paged: bool = False) -> Any:
+    """Specs for core.engine.EngineState (multi-host serving, step 1).
+
+    Extends ``block_state_pspecs`` to the serving state: every per-slot
+    ``[B]`` counter (``bs``/``blocks_left``/``phase``/``iters``/``active``/
+    ``prompt_start``/``sample_seeds``) and the batch-leading buffers shard
+    their slot dim over the batch-parallel axes (``dp_axes``); the PRNG key
+    is replicated.  Paged pools are unchanged from ``cache_pspecs(...,
+    paged=True)``: pages stay replicated over ``data`` (any slot's block
+    table may reference any page) with heads TP-sharded, and the block
+    table itself shards its slot dim like every other per-slot vector."""
+    from repro.core.engine import EngineState
+
+    dp = dp_axes(mesh)
+
+    def slot_vec(leaf) -> P:
+        return _guard((dp,), leaf.shape, mesh)
+
+    return EngineState(
+        tokens=batch_spec(state.tokens.shape, mesh),
+        caches=cache_pspecs(state.caches, mesh, paged=paged)
+        if state.caches != () else (),
+        conf=batch_spec(state.conf.shape, mesh),
+        pred=batch_spec(state.pred.shape, mesh),
+        hidden=tuple(
+            _guard((dp, None, "model"), h.shape, mesh) for h in state.hidden
+        ),
+        kv_valid=batch_spec(state.kv_valid.shape, mesh),
+        bs=slot_vec(state.bs),
+        blocks_left=slot_vec(state.blocks_left),
+        phase=slot_vec(state.phase),
+        iters=slot_vec(state.iters),
+        active=slot_vec(state.active),
+        key=P(),
+        prompt_start=slot_vec(state.prompt_start),
+        sample_seeds=slot_vec(state.sample_seeds),
+        block_tables=None if state.block_tables is None
+        else batch_spec(state.block_tables.shape, mesh),
+    )
+
+
 def train_state_pspecs(state: Any, mesh: Mesh) -> Any:
     """Specs for train.train_step.TrainState (FSDP x TP + replicated step)."""
     from repro.train.optimizer import OptState

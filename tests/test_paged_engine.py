@@ -282,6 +282,138 @@ def test_sampled_stream_equals_offline_replay(small_model):
             err_msg=f"sampled replay diverged for request {i}")
 
 
+def test_early_advance_greedy_equals_offline_replay(small_model):
+    """Per-row cadence + early block advance (parallel decoding finishes
+    blocks in ~1 iteration): every request's greedy output must be
+    BIT-IDENTICAL to its offline generate() — early advance only removes
+    the dead iterations after blk_done, which never touched tokens or
+    kv_valid — and the mixed-mode step still traces exactly once."""
+    cfg, model, params = small_model
+    gen = _es_cfg(parallel_decoding=True, pd_threshold=0.0)
+    reqs = _requests(cfg, 5, seed=13, full=True)
+    sched = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            early_advance=True)
+    it = iter(reqs)
+    for r in (next(it), next(it)):
+        sched.submit(r)
+    while sched.has_work():
+        sched.step()
+        nxt = next(it, None)
+        if nxt is not None:
+            sched.submit(nxt)          # mid-cycle admissions at any phase
+    done = sched.drain()
+    assert len(done) == 5
+    assert sched.engine.step_trace_count == 1, \
+        "mixed-mode rows must reuse ONE compiled step program"
+    assert sched.stats.early_advances > 0, \
+        "1-iteration blocks must advance before the aligned boundary"
+    assert sched.stats.pages_in_use == 0
+    eng = DiffusionEngine(model, gen, paged=True, page_size=PS)
+    ref = np.asarray(eng.generate(
+        params, jax.numpy.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0)))
+    by_id = {r.request_id: r.output for r in done}
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            by_id[r.request_id], ref[i, PROMPT_LEN:],
+            err_msg=f"early advance changed greedy output of request {i}")
+
+
+def test_early_advance_sampled_equals_offline_replay(small_model):
+    """Sampled (temperature > 0) + early advance: the lifetime iteration
+    counter JUMPS to blocks_done * steps_per_block at each advance, exactly
+    the offline numbering, so per-seed draw chains replay bit-identically
+    no matter how many dead iterations were skipped."""
+    cfg, model, params = small_model
+    gen = GenerationConfig(mode="dualcache", temperature=0.8,
+                           parallel_decoding=True, pd_threshold=0.0,
+                           prompt_refresh_period=0, block_refresh_period=1,
+                           **GEN)
+    reqs = _requests(cfg, 5, seed=15)
+    for i, r in enumerate(reqs):
+        r.sample_seed = 300 + i
+    sched = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, seed=0, early_advance=True)
+    it = iter(reqs)
+    for r in (next(it), next(it)):
+        sched.submit(r)
+    while sched.has_work():
+        sched.step()
+        nxt = next(it, None)
+        if nxt is not None:
+            sched.submit(nxt)
+    done = sched.drain()
+    assert len(done) == 5
+    assert sched.stats.early_advances > 0
+    eng = make_engine(model, gen)
+    ref = np.asarray(eng.generate(
+        params, jax.numpy.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0),
+        sample_seeds=jax.numpy.asarray([r.sample_seed for r in reqs])))
+    by_id = {r.request_id: r.output for r in done}
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            by_id[r.request_id], ref[i, PROMPT_LEN:],
+            err_msg=f"early-advance sampled replay diverged for request {i}")
+
+
+def test_mid_cycle_admission_bit_identity(small_model):
+    """Any-iteration admission WITHOUT parallel decoding: full-length blocks
+    mean admitted rows prefill (phase 0) while residents sit mid-block in
+    skip/refresh modes — the mixed-mode masks must keep every row's
+    trajectory exactly its offline one."""
+    cfg, model, params = small_model
+    gen = _es_cfg()                     # es mode: skip + block/prompt refresh
+    reqs = _requests(cfg, 6, seed=19, full=True)
+    sched = StreamScheduler(model, params, gen, max_slots=3,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            early_advance=True)
+    it = iter(reqs)
+    sched.submit(next(it))
+    phases_seen = set()
+    while sched.has_work():
+        phases_seen.update(np.asarray(sched.state.phase)[
+            np.asarray(sched.state.active)].tolist())
+        sched.step()
+        nxt = next(it, None)
+        if nxt is not None:
+            sched.submit(nxt)          # one admission per iteration
+    done = sched.drain()
+    assert len(done) == 6
+    assert len(phases_seen) > 1, "admissions never landed mid-cycle"
+    assert sched.engine.step_trace_count == 1
+    eng = DiffusionEngine(model, gen, paged=True, page_size=PS)
+    ref = np.asarray(eng.generate(
+        params, jax.numpy.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0)))
+    by_id = {r.request_id: r.output for r in done}
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            by_id[r.request_id], ref[i, PROMPT_LEN:],
+            err_msg=f"mid-cycle admission perturbed request {i}")
+
+
+def test_page_lane_guard_for_real_tpu_compiles():
+    """page_size < 128 lanes must be rejected when compiling the paged
+    kernels for real TPU, with interpret mode (CPU tests) exempt."""
+    from repro.kernels import ops
+    ops.validate_page_lanes(8, interpret=True)          # interpret: exempt
+    ops.validate_page_lanes(256, interpret=False)       # rounded pool: fine
+    with pytest.raises(ValueError, match="128"):
+        ops.validate_page_lanes(8, interpret=False)
+    with pytest.raises(ValueError, match="128"):
+        ops.validate_page_lanes(192, interpret=False)   # not a multiple
+    # the op wrappers guard before any Mosaic lowering can be attempted
+    pool = jax.numpy.zeros((4, 8, 2, 4))
+    new = jax.numpy.zeros((1, 2, 2, 4))
+    idx = jax.numpy.zeros((1, 2), jax.numpy.int32)
+    bt = jax.numpy.zeros((1, 2), jax.numpy.int32)
+    with pytest.raises(ValueError, match="128"):
+        ops.scatter_rows_paged(pool, new, idx, bt, page_size=8,
+                               impl="pallas", interpret=False)
+
+
 def test_duplicate_prompts_sample_distinct_completions(small_model):
     """The per-row key chain must decorrelate ROWS, not just iterations:
     a batch of identical prompts at temperature > 0 is the canonical

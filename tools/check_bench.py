@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Serving-bench regression guard (CI).
+
+Compares a freshly produced ``BENCH_serving.json`` against the committed
+baseline and FAILS (exit 1) if any guarded goodput metric regressed by more
+than ``--tol`` (default 10%).
+
+The committed baseline was produced on a different machine than the CI
+runner, so absolute tok/s are not comparable — every guarded goodput is
+first NORMALIZED by the same-run lock-step goodput (the machine-speed
+proxy: same model, same trace, same interpreter, measured seconds apart on
+the same box).  What the guard compares is therefore the scheduler's
+speedup over lock-step, which is machine-independent; a >10% drop in that
+ratio on the overhead-bound reduced config means a real algorithmic
+regression (extra engine steps, lost overlap, a retrace), not a slow
+runner.
+
+Guarded metrics (dotted paths into the JSON, each divided by the same
+file's ``lockstep.goodput`` before comparison):
+  * ``stream.goodput``               — continuous batching vs lock-step
+  * ``paged.goodput``                — paged pool at 2x slots
+  * ``early_advance.early.goodput``  — per-row cadence + early block advance
+plus two structural invariants of the early-advance run that must never
+regress regardless of machine speed:
+  * ``early_advance.outputs_bit_identical`` is true
+  * ``early_advance.early.goodput > early_advance.aligned.goodput`` and
+    ``early_advance.early.p95 < early_advance.aligned.p95`` (the win the
+    mixed-mode step exists for, measured at equal pool bytes on the same
+    trace)
+
+Usage (what .github/workflows/ci.yml runs):
+
+    cp BENCH_serving.json BENCH_baseline.json   # the committed baseline
+    PYTHONPATH=src python -m benchmarks.serving --requests 8 \
+        --json BENCH_serving.json
+    python tools/check_bench.py BENCH_serving.json BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GUARDED = (
+    "stream.goodput",
+    "paged.goodput",
+    "early_advance.early.goodput",
+)
+
+
+def _get(d: dict, path: str):
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def _speedup(d: dict, path: str):
+    """Guarded goodput normalized by the same run's lock-step goodput —
+    the machine-independent quantity the guard actually compares."""
+    n = _get(d, path)
+    ref = _get(d, "lockstep.goodput")
+    if n is None or not ref:
+        return None
+    return n / ref
+
+
+def check(new: dict, base: dict, tol: float) -> list[str]:
+    errors = []
+    for path in GUARDED:
+        n, b = _speedup(new, path), _speedup(base, path)
+        if b is None:
+            continue            # metric did not exist in the baseline yet
+        if n is None:
+            errors.append(f"{path}: missing from the new result "
+                          f"(baseline speedup over lock-step was {b:.2f}x)")
+            continue
+        floor = b * (1.0 - tol)
+        if n < floor:
+            errors.append(
+                f"{path}: speedup over same-run lock-step {n:.2f}x regressed "
+                f"more than {tol:.0%} below the baseline {b:.2f}x "
+                f"(floor {floor:.2f}x)")
+    ea = new.get("early_advance")
+    if ea is not None:
+        if not ea.get("outputs_bit_identical"):
+            errors.append("early_advance.outputs_bit_identical is not true")
+        if not ea["early"]["goodput"] > ea["aligned"]["goodput"]:
+            errors.append(
+                f"early advance must strictly beat block-aligned goodput: "
+                f"{ea['early']['goodput']:.2f} <= "
+                f"{ea['aligned']['goodput']:.2f}")
+        if not ea["early"]["p95"] < ea["aligned"]["p95"]:
+            errors.append(
+                f"early advance must strictly beat block-aligned p95: "
+                f"{ea['early']['p95']:.2f} >= {ea['aligned']['p95']:.2f}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new_json", help="freshly produced BENCH_serving.json")
+    ap.add_argument("baseline_json", help="committed baseline to compare to")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed relative goodput regression (default 0.10)")
+    args = ap.parse_args()
+    with open(args.new_json) as f:
+        new = json.load(f)
+    with open(args.baseline_json) as f:
+        base = json.load(f)
+    errors = check(new, base, args.tol)
+    for path in GUARDED:
+        n, b = _speedup(new, path), _speedup(base, path)
+        if n is not None and b is not None:
+            print(f"  {path} / lockstep.goodput: {b:.2f}x -> {n:.2f}x "
+                  f"({n / b:.2f} of baseline ratio)")
+    if errors:
+        print("serving-bench regression guard FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print("serving-bench regression guard passed "
+          f"(tolerance {args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
