@@ -45,6 +45,15 @@ while per-request greedy outputs stay bit-identical (idle iterations after
 ``blk_done`` never changed ``tokens``/``kv_valid``, so early advance only
 removes dead time).
 
+A sixth pair of runs measures the **adaptive feature cache** (dLLM-Cache
+integration) on a long-prompt Poisson trace at EQUAL pool bytes: both runs
+schedule a prompt refresh EVERY iteration (the recompute-everything regime),
+but the cached run replaces 7 of every 8 with a variation-gated PARTIAL
+refresh — shallow probe over the whole sequence, deep K/V recompute for only
+the top-fraction most-varied past tokens.  Reported: goodput gain, the
+scheduler's cache-hit gauges, and the quality delta (greedy agreement of the
+cached outputs against the uncached replay of the same trace).
+
 The harness entry (``benchmarks.run``) always writes ``BENCH_serving.json``
 next to the CWD so the perf trajectory accumulates per commit (the README
 documents every field); the CLI writes JSON only where ``--json`` points.
@@ -60,7 +69,7 @@ import time
 
 import numpy as np
 
-from repro.configs import GenerationConfig
+from repro.configs import GenerationConfig, SkipStage
 from repro.runtime import BatchServer, Request, StreamScheduler
 
 from benchmarks import costmodel
@@ -73,6 +82,12 @@ BLOCK_LENGTH = 8
 PAGE_SIZE = 8                   # t_total = 56 -> 7 virtual pages per slot
 REQ_BLOCKS = (1, 2, 4, 1, 2)    # request-length mix, cycled deterministically
 DUP_REQUESTS = 8                # duplicate-prefix burst size (sharing run)
+LONG_PROMPT_LEN = 600           # feature-cache trace: t_total = 616 -> 77 vpages
+CACHE_GEN_LENGTH = 16           # 2 blocks per long-prompt request
+CACHE_PROMPT_INTERVAL = 8       # 1 FULL + 7 PARTIAL refreshes per block
+CACHE_REFRESH_FRACTION = 0.03125  # top-R share a partial refresh recomputes
+CACHE_N_LAYERS = 8              # deeper stack for the feature-cache section
+CACHE_STAGES = (1, 2)           # skip boundaries -> probe is 1/8 of the stack
 
 
 def _mk_requests(bm, n: int, seed: int = 0) -> list[Request]:
@@ -210,6 +225,52 @@ def _run_cadence(bm, gcfg: GenerationConfig, reqs, arrivals, *,
     }
 
 
+def _mk_long_requests(bm, n: int, seed: int = 9) -> list[Request]:
+    """Full-length long prompts (the refresh-dominated regime the adaptive
+    feature cache targets) with a fixed 2-block budget so the cached and
+    uncached replays are token-for-token comparable."""
+    rng = np.random.default_rng(seed)
+    vocab = bm.model.cfg.vocab_size
+    return [Request(prompt=rng.integers(3, vocab, LONG_PROMPT_LEN
+                                        ).astype(np.int32),
+                    max_new_tokens=CACHE_GEN_LENGTH, sample_seed=i)
+            for i in range(n)]
+
+
+def _run_feature_cache(bm, gcfg: GenerationConfig, reqs, arrivals, *,
+                       kv_pages: int) -> dict:
+    """Replay the long-prompt trace through the early-advance paged
+    scheduler (equal pool bytes across the cached/uncached pair)."""
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
+                            prompt_len=LONG_PROMPT_LEN, paged=True,
+                            page_size=PAGE_SIZE, kv_pages=kv_pages,
+                            early_advance=True)
+    sched.submit(Request(prompt=reqs[0].prompt.copy(),
+                         max_new_tokens=reqs[0].max_new_tokens))
+    sched.drain()                                   # warm the compile cache
+    pages_total = sched.stats.pages_total
+    sched.stats.__init__()
+    sched.stats.pages_total = pages_total
+    warm_steps = sched._step_count
+    makespan = _replay(sched.submit, sched.step,
+                       lambda: not sched.has_work(), arrivals, reqs)
+    lat = np.asarray(sched.stats.latencies_s)
+    return {
+        "adaptive_cache": gcfg.adaptive_cache,
+        "goodput": sched.stats.tokens_out / makespan,
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "makespan": makespan,
+        "completed": sched.stats.completed,
+        "engine_steps": sched._step_count - warm_steps,
+        "step_traces": sched.engine.step_trace_count,
+        "pages_total": pages_total,
+        "cache_hit_fraction": sched.stats.cache_hit_fraction,
+        "tokens_refreshed_p50": sched.stats.tokens_refreshed_p50,
+        "outputs": [r.output.tolist() for r in reqs],
+    }
+
+
 def _run_dup_prefix(bm, gcfg: GenerationConfig, *, sharing: bool) -> dict:
     """Burst of identical greedy 1-block requests at a pool sized for TWO
     unshared requests: admitted concurrency is purely page-gated, so the
@@ -311,6 +372,44 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
         "goodput_gain": early["goodput"] / max(aligned["goodput"], 1e-9),
         "p95_gain": aligned["p95"] / max(early["p95"], 1e-9),
     }
+    # adaptive feature cache: long-prompt Poisson trace, cached vs uncached
+    # at EQUAL pool bytes.  Both runs refresh every iteration
+    # (prompt_refresh_period=1 — the recompute-everything regime the
+    # dLLM-Cache baseline is): the cached run turns 7 of every 8 refreshes
+    # into variation-gated partials, the uncached one pays the full
+    # prompt-length prefill each time.
+    # deeper stack with the first skip boundary one group in: the shallow
+    # probe is 1/8 of the layers, so refresh FLOPs (not dispatch overhead)
+    # dominate the comparison even at bench sizes
+    bm_fc = build_bench_model(arch, n_layers=CACHE_N_LAYERS)
+    period = bm_fc.model.period
+    fc_stages = tuple(SkipStage(g * period, 0.5) for g in CACHE_STAGES)
+    fc_kw = dict(gen_length=CACHE_GEN_LENGTH, block_length=BLOCK_LENGTH,
+                 prompt_refresh_period=1, stages=fc_stages)
+    fc_base_cfg = gen_cfg(bm_fc, "es", **fc_kw)
+    fc_cached_cfg = gen_cfg(bm_fc, "es", **fc_kw,
+                            cache_prompt_interval=CACHE_PROMPT_INTERVAL,
+                            cache_refresh_fraction=CACHE_REFRESH_FRACTION)
+    fc_pages = SLOTS * ((LONG_PROMPT_LEN + CACHE_GEN_LENGTH) // PAGE_SIZE) + 1
+    fc_arrivals = _poisson_arrivals(n_requests, mean_ia, seed=2)
+    fc_base = _run_feature_cache(bm_fc, fc_base_cfg,
+                                 _mk_long_requests(bm_fc, n_requests),
+                                 fc_arrivals, kv_pages=fc_pages)
+    fc_cached = _run_feature_cache(bm_fc, fc_cached_cfg,
+                                   _mk_long_requests(bm_fc, n_requests),
+                                   fc_arrivals, kv_pages=fc_pages)
+    out_u = np.asarray(fc_base.pop("outputs"))
+    out_c = np.asarray(fc_cached.pop("outputs"))
+    greedy_agreement = float((out_u == out_c).mean())
+    feature_cache = {
+        "uncached": fc_base,
+        "cached": fc_cached,
+        "goodput_gain": fc_cached["goodput"] / max(fc_base["goodput"], 1e-9),
+        # quality delta: greedy disagreement of the cached run against the
+        # uncached replay of the SAME trace (0.0 = bit-identical outputs)
+        "greedy_agreement": greedy_agreement,
+        "quality_delta": 1.0 - greedy_agreement,
+    }
     # duplicate-prefix burst: sharing off vs on at EQUAL pool bytes
     dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
     dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
@@ -331,8 +430,9 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
             req_pages=n_vp_req, shared_pages=PROMPT_LEN // PAGE_SIZE),
     }
     return {"lockstep": lock, "stream": stream, "paged": paged,
-            "early_advance": early_advance, "dup_prefix": dup,
-            "kv": kv_report, "mean_interarrival_s": mean_ia}
+            "early_advance": early_advance, "feature_cache": feature_cache,
+            "dup_prefix": dup, "kv": kv_report,
+            "mean_interarrival_s": mean_ia}
 
 
 def _write_json(res: dict, path: str) -> None:
@@ -341,7 +441,11 @@ def _write_json(res: dict, path: str) -> None:
         "config": {"slots": SLOTS, "prompt_len": PROMPT_LEN,
                    "gen_length": GEN_LENGTH, "block_length": BLOCK_LENGTH,
                    "page_size": PAGE_SIZE, "req_blocks": list(REQ_BLOCKS),
-                   "dup_requests": DUP_REQUESTS},
+                   "dup_requests": DUP_REQUESTS,
+                   "long_prompt_len": LONG_PROMPT_LEN,
+                   "cache_gen_length": CACHE_GEN_LENGTH,
+                   "cache_prompt_interval": CACHE_PROMPT_INTERVAL,
+                   "cache_refresh_fraction": CACHE_REFRESH_FRACTION},
         **res,
     }
     with open(path, "w") as f:
@@ -384,6 +488,16 @@ def run(rows: list) -> None:
         f"{ea['early']['engine_steps']} "
         f"early_advances={ea['early']['early_advances']} at equal pool "
         f"bytes, outputs bit-identical",
+    ))
+    fc = res["feature_cache"]
+    rows.append((
+        "serving/feature_cache", dt * 1e6 / 4,
+        f"goodput={fc['uncached']['goodput']:.2f}->"
+        f"{fc['cached']['goodput']:.2f}tok/s ({fc['goodput_gain']:.2f}x) "
+        f"hit={fc['cached']['cache_hit_fraction']:.2f} "
+        f"refresh_p50={fc['cached']['tokens_refreshed_p50']:.0f} "
+        f"agreement={fc['greedy_agreement']:.3f} at equal pool bytes "
+        f"(long-prompt trace, refresh every iteration)",
     ))
     dup = res["dup_prefix"]
     rows.append((
@@ -433,6 +547,14 @@ def main() -> None:
           f"admission p50 {ea['aligned']['admission_wait_p50']*1e3:.0f} -> "
           f"{ea['early']['admission_wait_p50']*1e3:.0f} ms, outputs "
           f"bit-identical")
+    fc = res["feature_cache"]
+    print(f"feature-cache (long prompts, refresh every iteration, equal pool "
+          f"bytes): goodput {fc['uncached']['goodput']:.2f} -> "
+          f"{fc['cached']['goodput']:.2f} tok/s ({fc['goodput_gain']:.2f}x), "
+          f"cache hit {fc['cached']['cache_hit_fraction']:.2f}, "
+          f"tokens refreshed p50 {fc['cached']['tokens_refreshed_p50']:.0f}, "
+          f"greedy agreement {fc['greedy_agreement']:.3f} "
+          f"(quality delta {fc['quality_delta']:.3f})")
     dup = res["dup_prefix"]
     print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal pool "
           f"bytes): admitted concurrency "

@@ -193,8 +193,25 @@ class GenerationConfig:
     sparse_retention: float = 0.5
     sparse_kernel_size: int = 3
 
+    # adaptive cross-iteration feature cache (dLLM-Cache, PAPERS.md):
+    # every ``cache_prompt_interval``-th scheduled refresh is a FULL pass;
+    # the refreshes in between are PARTIAL — only the most-varied
+    # ``cache_refresh_fraction`` of past tokens (scored by cosine feature
+    # variation blended with confidence, gated by
+    # ``cache_variation_threshold``) get their K/V recomputed; the rest keep
+    # their cached pages.  0 or 1 disables the cache entirely (every refresh
+    # is full — bit-identical to the uncached engine).  The "response
+    # interval" of the ISSUE is the existing ``block_refresh_period``.
+    cache_prompt_interval: int = 0
+    cache_refresh_fraction: float = 0.25
+    cache_variation_threshold: float = 0.0
+
     def resolved_steps(self) -> int:
         return self.steps_per_block or self.block_length
+
+    @property
+    def adaptive_cache(self) -> bool:
+        return self.cache_prompt_interval > 1
 
 
 def default_skip_stages(n_layers: int, ratio: float = 0.5) -> tuple[SkipStage, ...]:

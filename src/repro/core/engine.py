@@ -88,6 +88,7 @@ distinct rows (e.g. duplicate prompts) still sample independently.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -99,6 +100,7 @@ from repro.core import sampler as smp
 from repro.core.schedule import (
     Segment,
     branch_index as resolve_branch_index,
+    full_refresh_pred as resolve_full_refresh_pred,
     prompt_refresh_pred as resolve_refresh_pred,
     resolve_segments,
 )
@@ -117,6 +119,11 @@ class BlockState(NamedTuple):
     kv_valid: jax.Array     # [B, T] bool — sparse-attention retention mask
     t: jax.Array            # iteration counter within the block
     key: jax.Array
+    # adaptive feature cache (None unless gen.adaptive_cache): cached
+    # probe-layer hidden states and last-observed per-token confidence —
+    # the inputs of the variation-gated partial-refresh predicate
+    feat: Optional[jax.Array] = None       # [B, T, d] f32
+    conf_full: Optional[jax.Array] = None  # [B, T] f32
 
 
 class EngineState(NamedTuple):
@@ -142,6 +149,11 @@ class EngineState(NamedTuple):
     prompt_start: jax.Array  # [B] first real (non-pad) prompt position
     sample_seeds: jax.Array  # [B] per-request sampling seed (folded into key)
     block_tables: Optional[jax.Array] = None  # [B, T/page_size] paged-KV map
+    # adaptive feature cache (None / zeros unless gen.adaptive_cache)
+    feat: Optional[jax.Array] = None          # [B, T, d] cached probe features
+    conf_full: Optional[jax.Array] = None     # [B, T] last-observed confidence
+    cache_refreshed: Optional[jax.Array] = None  # [B] cumulative tokens refreshed
+    cache_eligible: Optional[jax.Array] = None   # [B] cumulative eligible tokens
 
 
 def _row_scatter(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -179,6 +191,9 @@ class DiffusionEngine:
         early_advance: bool = False,         # serving: advance a row's block
                                              # the moment it fully unmasks
                                              # (else: shared-boundary advance)
+        gather_refresh: bool = False,        # serving: compact refreshing rows
+                                             # to a half-width prefill pass
+                                             # (paged, attention-only archs)
     ):
         self.model = model
         self.cfg = model.cfg
@@ -228,6 +243,31 @@ class DiffusionEngine:
                 "use a zero-ratio stage (SkipStage(l, 0.0)) for sparse-only mode"
             )
         self.n_per_step = max(1, -(-lb // gen.resolved_steps()))
+
+        # adaptive cross-iteration feature cache (dLLM-Cache): partial
+        # refreshes probe the shallow groups (up to the first skip-stage
+        # boundary) over the full sequence, then recompute only the
+        # variation-gated token subset through the deep groups.  Gated to
+        # attention-only period-1 ES archs — the partial pass reuses the
+        # decode-mode cache path, which for SSM/cross layers needs the
+        # dense-rejoin machinery the gathered subset cannot provide.
+        self.adaptive_cache = gen.adaptive_cache
+        if self.adaptive_cache:
+            assert gen.mode == "es", "adaptive feature cache: ES engine only"
+            assert model.period == 1 and all(
+                k == "attn" for k, _ in model.layer_info
+            ), "adaptive feature cache: attention-only period-1 archs only"
+            assert self.n_stages > 0, (
+                "adaptive feature cache needs >=1 skip stage as its probe "
+                "boundary; use a zero-ratio stage (SkipStage(l, 0.0))")
+            self.cache_probe_groups = self.segments[0].group_hi
+        self.gather_refresh = gather_refresh
+        if gather_refresh:
+            assert paged, "gather_refresh compaction needs the paged KV pool " \
+                "(batch-free pool planes make row gathering transparent)"
+            assert all(k == "attn" for k, _ in model.layer_info), (
+                "gather_refresh: attention-only archs (cross/SSM caches are "
+                "batch-major and would need a second gather/scatter path)")
 
     # ------------------------------------------------------------------
     # per-row block indexing
@@ -332,25 +372,33 @@ class DiffusionEngine:
 
         # sparse eviction is sticky across blocks: the retained set only ever
         # shrinks (outside the current block), so kv_valid threads through
-        # the block loop exactly as EngineState carries it in serving
-        kv_valid = jnp.ones((b, p + gen.gen_length), bool)
+        # the block loop exactly as EngineState carries it in serving.  The
+        # adaptive feature cache's planes thread the same way (a mid-block
+        # partial refresh reads confidences persisted by earlier blocks).
+        t_total = p + gen.gen_length
+        kv_valid = jnp.ones((b, t_total), bool)
+        feat = conf_full = None
+        if self.adaptive_cache:
+            feat = jnp.zeros((b, t_total, self.cfg.d_model), jnp.float32)
+            conf_full = jnp.zeros((b, t_total), jnp.float32)
         for blk in range(n_blocks):
             bs = jnp.full((b,), p + blk * lb, jnp.int32)
             iters0 = jnp.full((b,), blk * gen.resolved_steps(), jnp.int32)
-            tokens, kv_valid = self._jit_run_block(
-                params, tokens, kv_valid, key, bs, iters0,
+            tokens, kv_valid, feat, conf_full = self._jit_run_block(
+                params, tokens, kv_valid, feat, conf_full, key, bs, iters0,
                 sample_seeds, prompt_start, enc_out)
         return tokens
 
     # ------------------------------------------------------------------
     # per-block loop
     # ------------------------------------------------------------------
-    def _run_block(self, params, tokens, kv_valid0, key, bs, iters0, seeds,
-                   prompt_start, enc_out):
+    def _run_block(self, params, tokens, kv_valid0, feat0, conf_full0, key,
+                   bs, iters0, seeds, prompt_start, enc_out):
         gen = self.gen
         b, t_total = tokens.shape
         bs = self._bs_rows(bs, b)
-        state = self.make_block_state(tokens, key)._replace(kv_valid=kv_valid0)
+        state = self.make_block_state(tokens, key)._replace(
+            kv_valid=kv_valid0, feat=feat0, conf_full=conf_full0)
         block_tables = self._identity_block_tables(b, t_total) if self.paged else None
         max_steps = gen.resolved_steps() + 1
 
@@ -366,10 +414,11 @@ class DiffusionEngine:
             return self._apply_unmask(st, bs, *outs)
 
         state = jax.lax.while_loop(cond, body, state)
-        return state.tokens, state.kv_valid
+        return state.tokens, state.kv_valid, state.feat, state.conf_full
 
     def _apply_unmask(self, st: BlockState, bs, caches, conf, pred, hidden,
-                      kv_valid, active: Optional[jax.Array] = None):
+                      kv_valid, feat=None, stats=None,
+                      active: Optional[jax.Array] = None):
         gen = self.gen
         bs = self._bs_rows(bs, st.tokens.shape[0])
         cols = self._block_cols(bs)
@@ -380,10 +429,17 @@ class DiffusionEngine:
             sel = sel & active[:, None]
         new_blk = jnp.where(sel, pred, blk_tok)
         new_tokens = _row_scatter(st.tokens, new_blk, cols)
+        conf_full = st.conf_full
+        if self.adaptive_cache:
+            # persist the block's freshest confidences at their absolute
+            # positions: settled blocks keep their final values, giving past
+            # response tokens the confidence term of the refresh priority
+            conf_full = _row_scatter(st.conf_full, conf, cols)
         # the base key is never split: draws use fold_in(key, row_iteration),
         # which continuous batching reproduces per slot for bit-equal replay
         return BlockState(new_tokens, caches, conf, pred, hidden,
-                          kv_valid, st.t + 1, st.key)
+                          kv_valid, st.t + 1, st.key,
+                          st.feat if feat is None else feat, conf_full)
 
     # ------------------------------------------------------------------
     # standalone steps (serving runtime & multi-pod dry-run)
@@ -401,6 +457,10 @@ class DiffusionEngine:
         caches = () if self.gen.mode == "vanilla" else self.model.init_cache(
             b, t_total, lb, kv_dtype=self.kv_cache_dtype,
             kv_pages=kv_pages, page_size=self.page_size)
+        feat = conf_full = None
+        if self.adaptive_cache:
+            feat = jnp.zeros((b, t_total, self.cfg.d_model), jnp.float32)
+            conf_full = jnp.zeros((b, t_total), jnp.float32)
         return BlockState(
             tokens=tokens, caches=caches,
             conf=jnp.zeros((b, lb), jnp.float32),
@@ -409,6 +469,7 @@ class DiffusionEngine:
                          for _ in range(self.n_stages)),
             kv_valid=jnp.ones((b, t_total), bool),
             t=jnp.zeros((), jnp.int32), key=key,
+            feat=feat, conf_full=conf_full,
         )
 
     def decode_iteration(self, params, st: BlockState, bs) -> BlockState:
@@ -437,24 +498,34 @@ class DiffusionEngine:
         per-request sampling seed (together: the draw-key index);
         ``prompt_start`` [B] masks pad prompt rows; ``block_tables`` routes
         the paged KV pool (None = dense).
-        Returns ``(caches, conf, pred, hidden, kv_valid)``."""
+        Returns ``(caches, conf, pred, hidden, kv_valid, feat, stats)``."""
+        b = st.tokens.shape[0]
+        zstats = jnp.zeros((b, 2), jnp.int32)
         if self.gen.mode == "vanilla":
             conf, pred, st = self._vanilla_compute(params, st, bs, enc_out,
                                                    iters, seeds)
-            return st.caches, conf, pred, st.hidden, st.kv_valid
-        branch = self._branch_index(st.t)
-        return jax.lax.switch(
-            branch,
-            [
-                functools.partial(self._decode_step, params, bs, iters, seeds,
-                                  prompt_start, block_tables, skip=True),
-                functools.partial(self._decode_step, params, bs, iters, seeds,
-                                  prompt_start, block_tables, skip=False),
-                functools.partial(self._prefill_step, params, bs, iters, seeds,
-                                  prompt_start, block_tables, enc_out),
-            ],
-            st,
-        )
+            return (st.caches, conf, pred, st.hidden, st.kv_valid,
+                    st.feat, zstats)
+        # all offline rows share one lifetime iteration, so row 0's suffices
+        # for the (scalar) switch index — the full/partial refresh split is a
+        # function of the lifetime counter, not the phase alone
+        branch = self._branch_index(st.t, iters[0])
+        branches = [
+            functools.partial(self._decode_step, params, bs, iters, seeds,
+                              prompt_start, block_tables, skip=True),
+            functools.partial(self._decode_step, params, bs, iters, seeds,
+                              prompt_start, block_tables, skip=False),
+            functools.partial(self._prefill_step, params, bs, iters, seeds,
+                              prompt_start, block_tables, enc_out),
+        ]
+        if self.adaptive_cache:
+            # branch 3 exists ONLY with the cache enabled: the disabled
+            # engine's program is structurally unchanged (bit-identity)
+            branches.append(
+                functools.partial(self._partial_refresh_step, params, bs,
+                                  iters, seeds, prompt_start, block_tables,
+                                  enc_out))
+        return jax.lax.switch(branch, branches, st)
 
     def _prompt_refresh_pred(self, t):
         """Prompt-refresh predicate on a phase ``t`` — works on python ints
@@ -464,9 +535,11 @@ class DiffusionEngine:
         (``core.schedule.prompt_refresh_pred``)."""
         return resolve_refresh_pred(self.gen, t)
 
-    def _branch_index(self, t: jax.Array) -> jax.Array:
-        """Phase -> branch (elementwise: scalar offline, ``[B]`` serving)."""
-        return resolve_branch_index(self.gen, t)
+    def _branch_index(self, t: jax.Array, iters=None) -> jax.Array:
+        """Phase -> branch (elementwise: scalar offline, ``[B]`` serving).
+        ``iters`` (lifetime counter) splits scheduled refreshes into full
+        (2) vs partial (3) when the adaptive feature cache is enabled."""
+        return resolve_branch_index(self.gen, t, iters)
 
     # ------------------------------------------------------------------
     # slot-based continuous serving (runtime.scheduler drives this)
@@ -500,6 +573,9 @@ class DiffusionEngine:
             prompt_start=jnp.zeros((batch,), jnp.int32),
             sample_seeds=jnp.zeros((batch,), jnp.int32),
             block_tables=block_tables,
+            feat=bst.feat, conf_full=bst.conf_full,
+            cache_refreshed=jnp.zeros((batch,), jnp.int32),
+            cache_eligible=jnp.zeros((batch,), jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -581,8 +657,8 @@ class DiffusionEngine:
 
     def _merge_step_outputs(self, mask, old, new):
         """Per-row merge of one mode pass's ``(caches, conf, pred, hidden,
-        kv_valid)`` into the carried tuple: rows in ``mask`` take the pass's
-        results, every other row keeps its carried state.
+        kv_valid, feat, stats)`` into the carried tuple: rows in ``mask``
+        take the pass's results, every other row keeps its carried state.
 
         Cache leaves split two ways: self-attention KV was already
         row-masked at the scatter (dense: write-back of the gathered old
@@ -592,8 +668,8 @@ class DiffusionEngine:
         cache kind is batch-major ``[G, B, ...]`` and merges with a plain
         per-row select (cross K/V and SSM snapshots are overwritten
         wholesale by a pass, not scattered)."""
-        o_caches, o_conf, o_pred, o_hidden, o_kv = old
-        n_caches, n_conf, n_pred, n_hidden, n_kv = new
+        o_caches, o_conf, o_pred, o_hidden, o_kv, o_feat, o_stats = old
+        n_caches, n_conf, n_pred, n_hidden, n_kv, n_feat, n_stats = new
         caches = n_caches
         if o_caches != ():
             caches = dict(n_caches)
@@ -611,6 +687,9 @@ class DiffusionEngine:
             tuple(jnp.where(mask[:, None, None], n, o)
                   for o, n in zip(o_hidden, n_hidden)),
             jnp.where(m1, n_kv, o_kv),
+            None if o_feat is None else jnp.where(mask[:, None, None],
+                                                  n_feat, o_feat),
+            jnp.where(m1, n_stats, o_stats),
         )
 
     def _mixed_step_outputs(self, params, state: EngineState, st: BlockState,
@@ -624,33 +703,58 @@ class DiffusionEngine:
         their own rows' cache state — attention never crosses rows, and
         shared paged pages belong to cohorts whose rows share a phase)."""
         bs = state.bs
-        br = self._branch_index(state.phase)                     # [B]
+        br = self._branch_index(state.phase, state.iters)        # [B]
         iters, seeds = state.iters, state.sample_seeds
         prompt_start, bt = state.prompt_start, state.block_tables
+        b = st.tokens.shape[0]
+
+        def carried(carry):
+            return st._replace(caches=carry[0], conf=carry[1],
+                               pred=carry[2], hidden=carry[3],
+                               kv_valid=carry[4], feat=carry[5])
 
         def decode_pass(skip: bool, mask):
             def run(carry):
-                sti = st._replace(caches=carry[0], conf=carry[1],
-                                  pred=carry[2], hidden=carry[3],
-                                  kv_valid=carry[4])
                 out = self._decode_step(params, bs, iters, seeds,
-                                        prompt_start, bt, sti, skip=skip,
-                                        row_mask=mask)
+                                        prompt_start, bt, carried(carry),
+                                        skip=skip, row_mask=mask)
                 return self._merge_step_outputs(mask, carry, out)
             return run
 
         def prefill_pass(mask):
             def run(carry):
-                sti = st._replace(caches=carry[0], conf=carry[1],
-                                  pred=carry[2], hidden=carry[3],
-                                  kv_valid=carry[4])
                 out = self._prefill_step(params, bs, iters, seeds,
-                                         prompt_start, bt, enc_out, sti,
-                                         row_mask=mask)
+                                         prompt_start, bt, enc_out,
+                                         carried(carry), row_mask=mask)
+                return self._merge_step_outputs(mask, carry, out)
+
+            def run_compact(carry):
+                return self._compact_prefill(params, bs, iters, seeds,
+                                             prompt_start, bt, enc_out,
+                                             carried(carry), carry, mask)
+            if not self.gather_refresh:
+                return run
+            cap = max(1, b // 2)
+
+            def dispatch(carry):
+                # gathered-subset refresh: when at most half the slots are
+                # refreshing, compact them into a half-width prefill so one
+                # refreshing row no longer pays for all B rows
+                return jax.lax.cond(jnp.sum(mask) <= cap,
+                                    run_compact, run, carry)
+            return dispatch
+
+        def partial_pass(mask):
+            def run(carry):
+                out = self._partial_refresh_step(params, bs, iters, seeds,
+                                                 prompt_start, bt, enc_out,
+                                                 carried(carry),
+                                                 row_mask=mask)
                 return self._merge_step_outputs(mask, carry, out)
             return run
 
-        carry = (st.caches, st.conf, st.pred, st.hidden, st.kv_valid)
+        carry = (st.caches, st.conf, st.pred, st.hidden, st.kv_valid,
+                 st.feat, jnp.zeros((b, 2), jnp.int32))
         skip_rows = state.active & (br == 0)
         noskip_rows = state.active & (br == 1)
         refresh_rows = state.active & (br == 2)
@@ -661,6 +765,13 @@ class DiffusionEngine:
                              carry)
         carry = jax.lax.cond(jnp.any(refresh_rows),
                              prefill_pass(refresh_rows), lambda c: c, carry)
+        if self.adaptive_cache:
+            # branch 3 is only ever emitted with the cache enabled; gating
+            # statically keeps the disabled program byte-identical
+            partial_rows = state.active & (br == 3)
+            carry = jax.lax.cond(jnp.any(partial_rows),
+                                 partial_pass(partial_rows), lambda c: c,
+                                 carry)
         return carry
 
     def _engine_step(self, params, state: EngineState, enc_out) -> EngineState:
@@ -670,14 +781,17 @@ class DiffusionEngine:
         steps_pb = gen.resolved_steps()
         bs = state.bs
         st = BlockState(state.tokens, state.caches, state.conf, state.pred,
-                        state.hidden, state.kv_valid, state.phase, state.key)
+                        state.hidden, state.kv_valid, state.phase, state.key,
+                        state.feat, state.conf_full)
         if gen.mode == "vanilla":
             conf, pred, st = self._vanilla_compute(
                 params, st, bs, enc_out, iters=state.iters,
                 seeds=state.sample_seeds)
-            outs = (st.caches, conf, pred, st.hidden, st.kv_valid)
+            outs = (st.caches, conf, pred, st.hidden, st.kv_valid, st.feat,
+                    jnp.zeros((bs.shape[0], 2), jnp.int32))
         else:
             outs = self._mixed_step_outputs(params, state, st, enc_out)
+        stats = outs[6]
         st = self._apply_unmask(st, bs, *outs, active=state.active)
 
         phase_used = state.phase
@@ -715,6 +829,9 @@ class DiffusionEngine:
             prompt_start=state.prompt_start,
             sample_seeds=state.sample_seeds,
             block_tables=state.block_tables,
+            feat=st.feat, conf_full=st.conf_full,
+            cache_refreshed=state.cache_refreshed + stats[:, 0],
+            cache_eligible=state.cache_eligible + stats[:, 1],
         )
 
     # ------------------------------------------------------------------
@@ -792,10 +909,16 @@ class DiffusionEngine:
             scatter_mask=row_mask,
         )
         hidden = []
+        feat = st.feat
         for seg in self.segments:
             out = model.run_layers(params, h, ctx, caches,
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)
             h, caches = out.h, out.caches
+            if self.adaptive_cache and seg.group_hi == self.cache_probe_groups:
+                # snapshot the probe-boundary features for every position:
+                # the baseline the next partial refresh measures variation
+                # against (unowned rows are merged away one level up)
+                feat = h.astype(jnp.float32)
             if seg.keep_k is not None:
                 hidden.append(_row_gather(h, cols).astype(jnp.float32))
         logits_blk = model.logits(params, _row_gather(h, cols))
@@ -809,7 +932,15 @@ class DiffusionEngine:
             # sticky: a refresh can only shrink the retained set outside the
             # current block — dead rows stay dead (their page may be gone)
             kv_valid = keep & attend_valid
-        return caches, conf, pred, tuple(hidden), kv_valid
+        stats = jnp.zeros((b, 2), jnp.int32)
+        if self.adaptive_cache:
+            # a full refresh recomputes every eligible past token: it counts
+            # as "refreshed == eligible" toward the cache-hit gauges
+            eligible = self._cache_eligible(st, bs, in_block, prompt_start,
+                                            block_tables)
+            n_el = jnp.sum(eligible, axis=1).astype(jnp.int32)
+            stats = jnp.stack([n_el, n_el], axis=1)
+        return caches, conf, pred, tuple(hidden), kv_valid, feat, stats
 
     def _decode_step(self, params, bs, iters, seeds, prompt_start,
                      block_tables, st: BlockState, *, skip: bool,
@@ -864,7 +995,158 @@ class DiffusionEngine:
         )
         conf = _row_scatter(st.conf, conf_new, s_idx)
         pred = _row_scatter(st.pred, pred_new, s_idx)
-        return caches, conf, pred, tuple(hidden), st.kv_valid
+        return (caches, conf, pred, tuple(hidden), st.kv_valid, st.feat,
+                jnp.zeros((b, 2), jnp.int32))
+
+    # ------------------------------------------------------------------
+    # adaptive feature cache (branch 3)
+    def _cache_eligible(self, st: BlockState, bs, in_block, prompt_start,
+                        block_tables):
+        """Past tokens whose cached K/V a partial refresh may recompute:
+        attendable (not evicted), real (not left-pad), and outside the
+        current block — the block pass owns those.  In paged mode the
+        position's page must still be mapped: a refresh scatter to an
+        unmapped page would land on the garbage page and silently lose the
+        fresh values, so unmapped positions are never *selected* (their
+        stale pool rows are unreachable anyway)."""
+        t_total = st.tokens.shape[1]
+        col = jnp.arange(t_total, dtype=jnp.int32)[None]
+        eligible = st.kv_valid & ~in_block & (col >= prompt_start[:, None])
+        if self.paged:
+            eligible &= jnp.repeat(block_tables >= 0, self.page_size, axis=1)
+        return eligible
+
+    def _partial_refresh_step(self, params, bs, iters, seeds, prompt_start,
+                              block_tables, enc_out, st: BlockState,
+                              row_mask: Optional[jax.Array] = None):
+        """PARTIAL prompt refresh (branch 3, adaptive feature cache).
+
+        The dLLM-Cache move: between FULL refreshes, run only the shallow
+        probe groups over the whole sequence, measure per-token feature
+        variation against the cached probe features (``st.feat``) blended
+        with last-observed confidence (``st.conf_full``), and push just the
+        top-``cache_refresh_fraction`` most-varied past tokens — those at or
+        above ``cache_variation_threshold`` — through the deep groups to
+        recompute their K/V.  Everything else keeps its cached K/V
+        (token-masked scatters make the unselected writes exact no-ops).
+        The carried caches are never zeroed here.  Ends with the standard
+        all-rows block pass so the iteration still advances denoising.
+
+        ``row_mask`` works exactly as in ``_prefill_step``: unowned rows
+        flow through with scatters dropped, the caller merges them away."""
+        model, gen = self.model, self.gen
+        b, t_total = st.tokens.shape
+        lb = gen.block_length
+        gp = self.cache_probe_groups
+        col = jnp.arange(t_total, dtype=jnp.int32)[None]
+        in_block = (col >= bs[:, None]) & (col < (bs + lb)[:, None])
+        attend_valid = st.kv_valid | in_block
+        kv_pos = self._kv_pos(attend_valid, prompt_start)
+
+        # 1. shallow probe: full-sequence pass over groups [0, gp) — their
+        # K/V refresh everywhere (cheap) and the boundary hidden state is
+        # the fresh feature vector
+        h = model.embed(params, st.tokens)
+        pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None],
+                               (b, t_total))
+        ctx = self._ctx(
+            "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
+            block_start=bs, enc_out=enc_out,
+            block_tables=block_tables, page_size=self.page_size,
+            scatter_mask=row_mask,
+        )
+        out = model.run_layers(params, h, ctx, st.caches,
+                               group_lo=0, group_hi=gp)
+        h_probe, caches = out.h, out.caches
+        feat = h_probe.astype(jnp.float32)
+
+        # 2. variation-gated selection: static top-R by score, then a
+        # per-token threshold mask (so a quiet sequence refreshes fewer
+        # than R tokens — the filler slots become masked no-op scatters)
+        scores = ops.variation_score(
+            feat, st.feat, st.conf_full,
+            alpha=gen.alpha, impl=self.importance_impl,
+        )
+        eligible = self._cache_eligible(st, bs, in_block, prompt_start,
+                                        block_tables)
+        cand = jnp.where(eligible, scores, -jnp.inf)
+        r = max(1, min(t_total,
+                       math.ceil(gen.cache_refresh_fraction * (t_total - lb))))
+        val, sel = jax.lax.top_k(cand, r)
+        tok_ok = jnp.isfinite(val) & (val >= gen.cache_variation_threshold)
+
+        # 3. deep refresh of the selected subset: decode-mode pass over the
+        # gathered rows through groups [gp, G); the token mask drops the
+        # below-threshold / ineligible-filler scatters so their cached K/V
+        # survive bit-exactly
+        h_sel = jnp.take_along_axis(h_probe, sel[..., None], axis=1)
+        dctx = self._ctx(
+            "decode", sel, kv_pos=kv_pos, slot_idx=sel,
+            block_tables=block_tables, page_size=self.page_size,
+            scatter_mask=row_mask, refresh_mask=tok_ok,
+        )
+        out = model.run_layers(params, h_sel, dctx, caches,
+                               group_lo=gp, group_hi=model.n_groups)
+        caches = out.caches
+
+        # 4. standard block-refresh pass on the partially refreshed caches
+        out7 = self._decode_step(params, bs, iters, seeds, prompt_start,
+                                 block_tables, st._replace(caches=caches),
+                                 skip=False, row_mask=row_mask)
+        stats = jnp.stack([jnp.sum(tok_ok, axis=1),
+                           jnp.sum(eligible, axis=1)],
+                          axis=1).astype(jnp.int32)
+        return out7[:5] + (feat, stats)
+
+    def _compact_prefill(self, params, bs, iters, seeds, prompt_start,
+                         block_tables, enc_out, st: BlockState, carry, mask):
+        """Gathered-subset prompt refresh (``gather_refresh=True``).
+
+        When at most half the batch is refreshing this step, gather the
+        refreshing rows (plus filler) to the front, run ``_prefill_step``
+        on the compacted half-batch, and scatter the outputs back.  Paged
+        pools are batch-free ([G, P, ps, H, D] leaves addressed through
+        ``block_tables``), so gathering the *block tables* redirects the
+        compacted rows to their own pages and the cache writes land in
+        place — no pool gather/scatter needed (why this path asserts paged
+        + attention-only).  Cuts full-sequence refresh FLOPs ~2x on mixed
+        steps where a single long-prompt row triggers the refresh."""
+        b = mask.shape[0]
+        cap = max(1, b // 2)
+        # stable argsort: refreshing rows first, original order preserved
+        rows = jnp.argsort(~mask)[:cap]
+        sub_mask = jnp.take(mask, rows)
+
+        def g(a):
+            return None if a is None else jnp.take(a, rows, axis=0)
+
+        st_g = st._replace(
+            tokens=g(st.tokens), conf=g(st.conf), pred=g(st.pred),
+            hidden=tuple(g(hh) for hh in st.hidden),
+            kv_valid=g(st.kv_valid), feat=g(st.feat),
+            conf_full=g(st.conf_full),
+        )
+        out = self._prefill_step(params, g(bs), g(iters), g(seeds),
+                                 g(prompt_start), g(block_tables), enc_out,
+                                 st_g, row_mask=sub_mask)
+        caches, conf, pred, hidden, kv_valid, feat, stats = out
+
+        def put(full, sub):
+            if full is None:
+                return None
+            m = sub_mask.reshape((cap,) + (1,) * (sub.ndim - 1))
+            keep = jnp.where(m, sub.astype(full.dtype),
+                             jnp.take(full, rows, axis=0))
+            return full.at[rows].set(keep)
+
+        o_caches, o_conf, o_pred, o_hidden, o_kv, o_feat, o_stats = carry
+        return (
+            caches,  # batch-free paged pools: writes already landed in place
+            put(o_conf, conf), put(o_pred, pred),
+            tuple(put(o, s) for o, s in zip(o_hidden, hidden)),
+            put(o_kv, kv_valid), put(o_feat, feat),
+            put(o_stats, stats),
+        )
 
     def _vanilla_compute(self, params, st: BlockState, bs, enc_out,
                          iters=None, seeds=None):

@@ -35,10 +35,36 @@ def prompt_refresh_pred(gen: GenerationConfig, t):
     return r
 
 
-def branch_index(gen: GenerationConfig, t):
+def full_refresh_pred(gen: GenerationConfig, iters):
+    """Among scheduled prompt refreshes, which are FULL (vs PARTIAL).
+
+    ``iters`` is the *lifetime* iteration counter (the engine maintains the
+    invariant ``iters == block_idx * steps_per_block + phase`` even across
+    early block advances), so numbering refreshes off it gives a stable
+    refresh index: ``nrb`` refreshes fire per block, the k-th scheduled
+    refresh overall is FULL iff ``k % cache_prompt_interval == 0``, and the
+    ones in between are PARTIAL (variation-gated).  With the adaptive cache
+    disabled every refresh is full.  Elementwise like
+    :func:`prompt_refresh_pred`."""
+    if not gen.adaptive_cache:
+        return iters == iters          # all True, any array/int shape
+    spb = gen.resolved_steps()
+    pp = gen.prompt_refresh_period
+    nrb = 1 + (spb - 1) // pp if pp > 0 else 1
+    ridx = (iters // spb) * nrb + ((iters % spb) // pp if pp > 0 else 0)
+    # a block's first iteration is ALWAYS full: it is the cache init for
+    # that block (the offline loop enters it with zeroed caches), so a
+    # partial pass there would leave unselected deep-group K/V empty
+    return ((ridx % gen.cache_prompt_interval) == 0) | ((iters % spb) == 0)
+
+
+def branch_index(gen: GenerationConfig, t, iters=None):
     """Iteration phase -> branch: 2 = prompt refresh (full-sequence
     prefill), 1 = block refresh (all block rows computed), 0 = skip decode
-    (the early-skip segment plan).  Elementwise like
+    (the early-skip segment plan).  With the adaptive feature cache enabled
+    and a lifetime ``iters`` supplied, scheduled prompt refreshes that are
+    not FULL per :func:`full_refresh_pred` map to branch 3 = partial refresh
+    (variation-gated K/V update of a token subset).  Elementwise like
     :func:`prompt_refresh_pred`: a ``[B]`` phase vector maps to the per-row
     mode vector the mixed-mode engine step masks its fused programs with."""
     import jax.numpy as jnp
@@ -46,7 +72,11 @@ def branch_index(gen: GenerationConfig, t):
     prompt_r = prompt_refresh_pred(gen, t)
     bp = gen.block_refresh_period
     block_r = (t % bp) == 0 if bp > 0 else (t != t)
-    return jnp.where(prompt_r, 2, jnp.where(block_r, 1, 0)).astype(jnp.int32)
+    refresh_br = 2
+    if gen.adaptive_cache and iters is not None:
+        refresh_br = jnp.where(full_refresh_pred(gen, iters), 2, 3)
+    return jnp.where(prompt_r, refresh_br,
+                     jnp.where(block_r, 1, 0)).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)

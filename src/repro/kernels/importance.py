@@ -50,3 +50,43 @@ def importance_kernel(
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(h_new, h_old, conf)
+
+
+def _variation_kernel(hn_ref, ho_ref, conf_ref, out_ref, *, alpha: float, eps: float):
+    hn = hn_ref[0].astype(jnp.float32)            # [K, d]
+    ho = ho_ref[0].astype(jnp.float32)            # [K, d]
+    conf = conf_ref[0].astype(jnp.float32)        # [K]
+    dot = jnp.sum(hn * ho, axis=-1)               # [K]
+    nn = jnp.sum(hn * hn, axis=-1)
+    no = jnp.sum(ho * ho, axis=-1)
+    cos = dot / (jnp.sqrt(nn * no) + eps)
+    out_ref[0] = alpha * conf + (1.0 - alpha) * (1.0 - cos)
+
+
+def variation_kernel(
+    h_new: jax.Array,   # [B, K, d]
+    h_old: jax.Array,   # [B, K, d]
+    conf: jax.Array,    # [B, K]
+    *,
+    alpha: float,
+    eps: float = 1e-8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Adaptive-cache refresh priority: alpha*conf + (1-alpha)*(1 - cosine).
+
+    Same single-VPU-pass structure as :func:`importance_kernel` — the three
+    reductions (dot, |Hn|^2, |Ho|^2) fuse into one read of each row."""
+    b, k, d = h_new.shape
+    kernel = functools.partial(_variation_kernel, alpha=alpha, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k, d), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, k, d), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((1, k), lambda bi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(h_new, h_old, conf)

@@ -23,7 +23,7 @@ from repro.kernels.flash_attention import (
     flash_attention_kernel,
     paged_flash_attention_kernel,
 )
-from repro.kernels.importance import importance_kernel
+from repro.kernels.importance import importance_kernel, variation_kernel
 from repro.kernels.scatter_kv import (
     fork_pages_kernel,
     paged_scatter_kv_kernel,
@@ -474,6 +474,7 @@ def scatter_rows(
     idx: jax.Array,     # [B, K] int32
     *,
     row_mask: jax.Array | None = None,   # [B] bool: False rows scatter no-ops
+    token_mask: jax.Array | None = None,  # [B, K] bool: False tokens keep cache
     impl: Impl = "xla",
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -483,12 +484,21 @@ def scatter_rows(
     no-ops by replacing their fresh values with the carried cache rows — a
     gather-merge on the ``[B, K, ...]`` update, far cheaper than selecting
     over the whole cache, and it works unchanged through the Pallas kernel.
+    ``token_mask`` (adaptive feature cache) is the same drain one axis finer:
+    gated-out tokens of otherwise-owned rows keep their cached values, making
+    the masked scatter the partial-update mechanism of variation-gated
+    refresh.  The two masks compose (a token is written iff both pass).
     """
-    if row_mask is not None:
+    if row_mask is not None or token_mask is not None:
         b, k = idx.shape
+        keep = jnp.ones((b, k), bool)
+        if row_mask is not None:
+            keep &= row_mask[:, None]
+        if token_mask is not None:
+            keep &= token_mask
         old = jnp.take_along_axis(
             cache.reshape(b, cache.shape[1], -1), idx[..., None], axis=1)
-        new = jnp.where(row_mask[:, None, None],
+        new = jnp.where(keep[..., None],
                         new.reshape(b, k, -1).astype(cache.dtype),
                         old).reshape(new.shape).astype(new.dtype)
     if impl == "pallas":
@@ -514,6 +524,7 @@ def scatter_rows_paged(
     *,
     page_size: int,
     row_mask: jax.Array | None = None,   # [B] bool: False rows -> garbage page
+    token_mask: jax.Array | None = None,  # [B, K] bool: False tokens keep pool
     impl: Impl = "xla",
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -523,11 +534,24 @@ def scatter_rows_paged(
     page 0 — never read back because readers mask ``kv_pos < 0`` there.
     ``row_mask`` (mixed-mode cadence) reuses exactly that drain: unowned
     rows see an all-unmapped WRITE view of their block-table row, so both
-    the XLA and the Pallas lowering drop them without a new code path."""
+    the XLA and the Pallas lowering drop them without a new code path.
+    ``token_mask`` (adaptive feature cache) gates individual tokens of
+    owned rows: gated-out tokens gather their current pool content and write
+    it straight back — an exact no-op through either lowering — so a partial
+    refresh scatters only the variation-gated subset."""
     ps = page_size
     assert pool.shape[1] == ps
     if row_mask is not None:
         block_tables = jnp.where(row_mask[:, None], block_tables, -1)
+    if token_mask is not None:
+        b, k = idx.shape
+        page = jnp.take_along_axis(block_tables, idx // ps, axis=1)   # [B, K]
+        src = jnp.maximum(page, 0) * ps + idx % ps
+        flat = pool.reshape((pool.shape[0] * ps, -1))
+        old = jnp.take(flat, src.reshape(-1), axis=0).reshape(b, k, -1)
+        new = jnp.where(token_mask[..., None],
+                        new.reshape(b, k, -1).astype(flat.dtype),
+                        old).reshape(new.shape).astype(new.dtype)
     if impl == "pallas":
         validate_page_lanes(ps, interpret=interpret)
         shape = pool.shape
@@ -608,6 +632,25 @@ def importance_score(
     return ref.importance_reference(h_new, h_old, conf, alpha, eps)
 
 
+def variation_score(
+    h_new: jax.Array,   # [B, K, d]
+    h_old: jax.Array,   # [B, K, d]
+    conf: jax.Array,    # [B, K]
+    *,
+    alpha: float,
+    eps: float = 1e-8,
+    impl: Impl = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Adaptive-cache refresh priority: alpha*conf + (1-alpha)*(1-cosine)."""
+    if impl == "pallas":
+        return variation_kernel(
+            h_new, h_old, conf, alpha=alpha, eps=eps,
+            interpret=_on_cpu() if interpret is None else interpret,
+        )
+    return ref.variation_reference(h_new, h_old, conf, alpha, eps)
+
+
 __all__ = [
     "attention",
     "paged_attention",
@@ -619,4 +662,5 @@ __all__ = [
     "scatter_rows_paged",
     "fork_pages",
     "importance_score",
+    "variation_score",
 ]

@@ -151,3 +151,28 @@ def importance_reference(
     norm = jnp.sqrt(jnp.sum(jnp.square(h_old.astype(jnp.float32)), axis=-1))
     var = diff / (jnp.sqrt(float(d)) * norm + eps)
     return alpha * conf.astype(jnp.float32) + (1.0 - alpha) * var
+
+
+def variation_reference(
+    h_new: jax.Array,       # [B, K, d]
+    h_old: jax.Array,       # [B, K, d]
+    conf: jax.Array,        # [B, K]
+    alpha: float,
+    eps: float = 1e-8,
+) -> jax.Array:
+    """Adaptive-cache refresh priority (dLLM-Cache):
+
+        V = a*c + (1-a) * (1 - cos(Hn, Ho))
+
+    Cosine distance of the cached vs fresh feature row, blended with
+    confidence using the same Eq.-1 alpha.  A zero cached row (cold start)
+    gives cos = 0, i.e. maximal variation — the token is always eligible for
+    refresh until it has been observed once.
+    """
+    hn = h_new.astype(jnp.float32)
+    ho = h_old.astype(jnp.float32)
+    dot = jnp.sum(hn * ho, axis=-1)
+    nn = jnp.sum(hn * hn, axis=-1)
+    no = jnp.sum(ho * ho, axis=-1)
+    cos = dot / (jnp.sqrt(nn * no) + eps)
+    return alpha * conf.astype(jnp.float32) + (1.0 - alpha) * (1.0 - cos)

@@ -60,6 +60,25 @@ def main() -> None:
     ap.add_argument("--dup-prompts", action="store_true",
                     help="submit one prompt duplicated --requests times "
                          "(the prefix-sharing showcase workload)")
+    ap.add_argument("--prompt-refresh-period", type=int, default=64,
+                    help="iterations between scheduled prompt refreshes "
+                         "(partial refreshes only exist when this is "
+                         "smaller than the steps per block)")
+    ap.add_argument("--cache-prompt-interval", type=int, default=0,
+                    help="adaptive feature cache: every k-th scheduled "
+                         "prompt refresh is FULL, the ones between are "
+                         "variation-gated PARTIAL refreshes (<=1 disables; "
+                         "es mode only)")
+    ap.add_argument("--cache-response-interval", type=int, default=4,
+                    help="short-interval response refresh: the block-refresh "
+                         "period (sets block_refresh_period)")
+    ap.add_argument("--cache-variation-threshold", type=float, default=0.0,
+                    help="minimum variation score a candidate token needs "
+                         "for its K/V to be recomputed in a partial refresh")
+    ap.add_argument("--gather-refresh", action="store_true",
+                    help="compact refreshing rows into a half-width prefill "
+                         "when at most half the slots refresh together "
+                         "(requires --paged)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -73,9 +92,11 @@ def main() -> None:
         block_length=args.block_length,
         mode=args.mode,
         skip_stages=default_skip_stages(cfg.n_layers) if args.mode == "es" else (),
-        prompt_refresh_period=64,
-        block_refresh_period=4,
+        prompt_refresh_period=args.prompt_refresh_period,
+        block_refresh_period=args.cache_response_interval,
         parallel_decoding=args.parallel_decoding,
+        cache_prompt_interval=args.cache_prompt_interval,
+        cache_variation_threshold=args.cache_variation_threshold,
     )
 
     stream_cb = None
@@ -89,7 +110,8 @@ def main() -> None:
                                  paged=args.paged, page_size=args.page_size,
                                  kv_pages=args.kv_pages,
                                  prefix_sharing=args.prefix_sharing,
-                                 early_advance=args.early_advance)
+                                 early_advance=args.early_advance,
+                                 gather_refresh=args.gather_refresh)
     else:
         server = BatchServer(model, params, gen, batch_size=args.batch,
                              prompt_len=args.prompt_len)
@@ -115,6 +137,9 @@ def main() -> None:
                  f"  admission_p50={server.stats.admission_wait_p50:.3f}s")
         if args.early_advance:
             line += f"  early_advances={server.stats.early_advances}"
+        if gen.adaptive_cache:
+            line += (f"  cache_hit={server.stats.cache_hit_fraction:.3f}"
+                     f"  refresh_p50={server.stats.tokens_refreshed_p50:.0f}")
         if args.paged:
             line += (f"  peak_pages={server.stats.peak_pages_in_use}"
                      f"/{server.stats.pages_total}"

@@ -125,12 +125,15 @@ def self_attention(
     attn_impl: str = "xla",
     use_rope: bool = True,
     scatter_mask: Optional[jax.Array] = None,   # [B] rows whose scatters land
+    token_mask: Optional[jax.Array] = None,     # [B, K] tokens whose K/V land
 ) -> tuple[jax.Array, Optional[KVCache | PagedKVCache]]:
     """Returns (output [B, K, d], updated cache or None).
 
     ``scatter_mask`` (mixed-mode cadence) drops the cache update for rows a
     pass does not own: dense caches write back the carried row, the paged
-    pool routes unowned rows to the garbage page.  Attention reads are
+    pool routes unowned rows to the garbage page.  ``token_mask`` (adaptive
+    feature cache) gates individual tokens within owned rows — gated-out
+    tokens keep their cached K/V (partial refresh).  Attention reads are
     unmasked — unowned rows still compute (one fused program), their
     outputs are discarded one level up."""
     b, k, _ = x.shape
@@ -141,7 +144,7 @@ def self_attention(
         return _paged_self_attention(
             params, q, kk, vv, cache, positions, slot_idx, kv_pos,
             causal=causal, window=window, anchor=anchor, attn_impl=attn_impl,
-            scatter_mask=scatter_mask,
+            scatter_mask=scatter_mask, token_mask=token_mask,
         )
 
     k_scale = v_scale = None
@@ -151,20 +154,22 @@ def self_attention(
             k8, ks = _quantize_rows(kk)
             v8, vs = _quantize_rows(vv)
             cache = KVCache(
-                ops.scatter_rows(cache.k, k8, slot_idx, row_mask=scatter_mask),
-                ops.scatter_rows(cache.v, v8, slot_idx, row_mask=scatter_mask),
+                ops.scatter_rows(cache.k, k8, slot_idx, row_mask=scatter_mask,
+                                 token_mask=token_mask),
+                ops.scatter_rows(cache.v, v8, slot_idx, row_mask=scatter_mask,
+                                 token_mask=token_mask),
                 ops.scatter_rows(cache.k_scale, ks, slot_idx,
-                                 row_mask=scatter_mask),
+                                 row_mask=scatter_mask, token_mask=token_mask),
                 ops.scatter_rows(cache.v_scale, vs, slot_idx,
-                                 row_mask=scatter_mask),
+                                 row_mask=scatter_mask, token_mask=token_mask),
             )
             k_scale, v_scale = cache.k_scale, cache.v_scale
         else:
             cache = KVCache(
                 ops.scatter_rows(cache.k, kk.astype(cache.k.dtype), slot_idx,
-                                 row_mask=scatter_mask),
+                                 row_mask=scatter_mask, token_mask=token_mask),
                 ops.scatter_rows(cache.v, vv.astype(cache.v.dtype), slot_idx,
-                                 row_mask=scatter_mask),
+                                 row_mask=scatter_mask, token_mask=token_mask),
             )
         k_full, v_full, kv_positions = cache.k, cache.v, kv_pos
     else:
@@ -191,13 +196,15 @@ def self_attention(
 
 def _paged_self_attention(
     params, q, kk, vv, cache: PagedKVCache, positions, slot_idx, kv_pos,
-    *, causal, window, anchor, attn_impl, scatter_mask=None,
+    *, causal, window, anchor, attn_impl, scatter_mask=None, token_mask=None,
 ) -> tuple[jax.Array, PagedKVCache]:
     """Scatter fresh rows through the block table, attend the page pool.
 
     ``scatter_mask`` drops unowned rows' writes by handing the scatter a
     write view of the block table with those rows forced to -1 (unmapped ⇒
-    garbage page) — reads keep the real table."""
+    garbage page) — reads keep the real table.  ``token_mask`` additionally
+    gates individual tokens (adaptive partial refresh): gated-out tokens
+    write back their current pool content, an exact no-op."""
     b, k = slot_idx.shape
     pool, bt, ps = cache.cache, cache.block_tables, cache.page_size
     if pool.quantized:
@@ -205,22 +212,26 @@ def _paged_self_attention(
         v8, vs = _quantize_rows(vv)
         pool = KVCache(
             ops.scatter_rows_paged(pool.k, k8, slot_idx, bt, page_size=ps,
-                                   row_mask=scatter_mask),
+                                   row_mask=scatter_mask, token_mask=token_mask),
             ops.scatter_rows_paged(pool.v, v8, slot_idx, bt, page_size=ps,
-                                   row_mask=scatter_mask),
+                                   row_mask=scatter_mask, token_mask=token_mask),
             ops.scatter_rows_paged(pool.k_scale, ks, slot_idx, bt,
-                                   page_size=ps, row_mask=scatter_mask),
+                                   page_size=ps, row_mask=scatter_mask,
+                                   token_mask=token_mask),
             ops.scatter_rows_paged(pool.v_scale, vs, slot_idx, bt,
-                                   page_size=ps, row_mask=scatter_mask),
+                                   page_size=ps, row_mask=scatter_mask,
+                                   token_mask=token_mask),
         )
         k_scale, v_scale = pool.k_scale, pool.v_scale
     else:
         k_scale = v_scale = None
         pool = KVCache(
             ops.scatter_rows_paged(pool.k, kk.astype(pool.k.dtype), slot_idx,
-                                   bt, page_size=ps, row_mask=scatter_mask),
+                                   bt, page_size=ps, row_mask=scatter_mask,
+                                   token_mask=token_mask),
             ops.scatter_rows_paged(pool.v, vv.astype(pool.v.dtype), slot_idx,
-                                   bt, page_size=ps, row_mask=scatter_mask),
+                                   bt, page_size=ps, row_mask=scatter_mask,
+                                   token_mask=token_mask),
         )
     out = ops.paged_attention(
         jnp.swapaxes(q, 1, 2),

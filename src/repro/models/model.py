@@ -71,6 +71,10 @@ class ForwardCtx:
     scatter_mask: Optional[jax.Array] = None  # [B] rows whose KV scatters land
                                               # (mixed-mode cadence: a pass
                                               # drops rows it does not own)
+    refresh_mask: Optional[jax.Array] = None  # [B, K] tokens whose KV scatters
+                                              # land (adaptive feature cache:
+                                              # a partial refresh recomputes
+                                              # only the variation-gated subset)
     enc_out: Optional[jax.Array] = None       # [B, E, d_enc]
     causal: bool = False
     window_override: int = 0                  # long-context windowed variant
@@ -397,6 +401,7 @@ class Model:
                 slot_idx=ctx.slot_idx, kv_pos=ctx.kv_pos,
                 causal=ctx.causal, window=window, anchor=ctx.anchor,
                 attn_impl=ctx.attn_impl, scatter_mask=ctx.scatter_mask,
+                token_mask=ctx.refresh_mask,
             )
             h = h + a
             if isinstance(new_kv, PagedKVCache):

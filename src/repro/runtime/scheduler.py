@@ -92,6 +92,14 @@ class SchedulerStats:
     early_advances: int = 0              # block advances before the aligned boundary
     admission_waits: list = dataclasses.field(default_factory=list)
                                          # per-request queue wait (arrival -> admit)
+    # adaptive feature cache (0 / empty with the cache disabled).  A FULL
+    # refresh counts refreshed == eligible; a PARTIAL refresh counts only the
+    # variation-selected tokens — so the hit fraction is the share of
+    # eligible past-token K/V recomputations the cache avoided.
+    cache_refreshed_total: int = 0       # past-token K/V rows recomputed
+    cache_eligible_total: int = 0        # past-token K/V rows a refresh saw
+    refresh_event_tokens: list = dataclasses.field(default_factory=list)
+                                         # tokens refreshed per refresh event
 
     @property
     def goodput(self) -> float:
@@ -103,6 +111,20 @@ class SchedulerStats:
         if not self.admission_waits:
             return 0.0
         return float(np.percentile(np.asarray(self.admission_waits), 50))
+
+    @property
+    def cache_hit_fraction(self) -> float:
+        """Fraction of eligible past-token K/V recomputations the adaptive
+        feature cache skipped (0.0 when disabled or before any refresh)."""
+        if not self.cache_eligible_total:
+            return 0.0
+        return 1.0 - self.cache_refreshed_total / self.cache_eligible_total
+
+    @property
+    def tokens_refreshed_p50(self) -> float:
+        if not self.refresh_event_tokens:
+            return 0.0
+        return float(np.percentile(np.asarray(self.refresh_event_tokens), 50))
 
     def gauges(self) -> dict:
         """Point-in-time gauge snapshot (the monitoring-surface dict)."""
@@ -116,6 +138,8 @@ class SchedulerStats:
             "resident_peak": self.resident_peak,
             "early_advances": self.early_advances,
             "admission_wait_p50": self.admission_wait_p50,
+            "cache_hit_fraction": self.cache_hit_fraction,
+            "tokens_refreshed_p50": self.tokens_refreshed_p50,
         }
 
     # BatchServer.stats compatibility
@@ -434,6 +458,16 @@ class StreamScheduler:
                     req.sample_seed if req.sample_seed is not None
                     else req.request_id),
             )
+            if st.feat is not None:
+                # adaptive feature cache: a recycled slot must not inherit the
+                # previous request's probe features / confidences or inflate
+                # its refresh counters
+                st = st._replace(
+                    feat=st.feat.at[slot].set(0.0),
+                    conf_full=st.conf_full.at[slot].set(0.0),
+                    cache_refreshed=st.cache_refreshed.at[slot].set(0),
+                    cache_eligible=st.cache_eligible.at[slot].set(0),
+                )
             if self.allocator is not None:
                 bt_row = np.full((t_total // self.page_size,), -1, np.int32)
                 shared_vps = {vp for vp, _ in shared_map}
@@ -518,10 +552,22 @@ class StreamScheduler:
         if self.paged and refresh_rows.any():
             self._cow_fork_before_refresh(refresh_rows)
         pre_blocks_left = np.asarray(self.state.blocks_left)
+        track_cache = self.state.feat is not None
+        if track_cache:
+            # cumulative per-slot counters (reset on admission): the step
+            # delta is this iteration's refresh activity
+            pre_r = np.asarray(self.state.cache_refreshed)
+            pre_e = np.asarray(self.state.cache_eligible)
         self.state = self.engine.step(self.params, self.state, self._enc_out)
         jax.block_until_ready(self.state.tokens)
         self._step_count += 1
         self.stats.wall_s += self.clock() - t0
+        if track_cache:
+            d_r = np.asarray(self.state.cache_refreshed) - pre_r
+            d_e = np.asarray(self.state.cache_eligible) - pre_e
+            self.stats.cache_refreshed_total += int(d_r.sum())
+            self.stats.cache_eligible_total += int(d_e.sum())
+            self.stats.refresh_event_tokens.extend(d_r[d_e > 0].tolist())
         if self.paged and self.gen.sparse_attention and refresh_rows.any():
             self._reclaim_dead_pages(refresh_rows)
         if self.early_advance:

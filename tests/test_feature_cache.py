@@ -1,0 +1,224 @@
+"""Adaptive cross-iteration feature cache (dLLM-Cache integration).
+
+Contract under test (docs/ARCHITECTURE.md "Adaptive feature-cache
+contract"):
+  * ``cache_prompt_interval <= 1`` disables the cache and the engine is
+    BIT-IDENTICAL to the uncached one (greedy and sampled, dense and
+    paged) — branch 3 does not even exist in the compiled program;
+  * with the cache enabled but every scheduled refresh FULL (the
+    prompt-refresh period at or above the block step count makes every
+    refresh block-initial), the machinery is live — feat/conf planes,
+    lifetime-indexed branch split, stats counters — yet outputs stay
+    bit-identical to the uncached engine;
+  * cached generation is dense-vs-paged bit-identical and
+    serving-vs-offline replay bit-identical, including mid-cycle
+    (early-advance) admission and the gathered-subset refresh path;
+  * the variation kernel matches its XLA reference bit-for-bit in
+    interpret mode;
+  * the cadence: the k-th scheduled refresh is FULL iff
+    ``k % cache_prompt_interval == 0``, and a block's first iteration is
+    always FULL.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs import GenerationConfig, SkipStage
+from repro.core.engine import DiffusionEngine
+from repro.core.schedule import branch_index, full_refresh_pred
+from repro.kernels import ops
+from repro.models import build_model
+from repro.runtime import Request, StreamScheduler
+from repro.runtime.request import pad_and_stack
+
+PROMPT_LEN = 16
+PS = 8
+GEN = dict(gen_length=16, block_length=8)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.reduced(configs.get_config("llada-8b"))
+    cfg = dataclasses.replace(cfg, n_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _cfg(**kw):
+    base = dict(mode="es", skip_stages=(SkipStage(1, 0.5),),
+                prompt_refresh_period=2, block_refresh_period=4, **GEN)
+    base.update(kw)
+    return GenerationConfig(**base)
+
+
+def _gen(model, params, gcfg, prompt, **ekw):
+    return np.asarray(DiffusionEngine(model, gcfg, **ekw)
+                      .generate(params, prompt, jax.random.PRNGKey(1)))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity when disabled / all-full
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("paged", [False, True])
+def test_interval_one_bit_identical_to_uncached(small_model, temperature,
+                                                paged):
+    """cache_prompt_interval <= 1 must be the uncached engine, bit for bit,
+    greedy and sampled, dense and paged."""
+    cfg, model, params = small_model
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (2, PROMPT_LEN),
+                                0, cfg.vocab_size)
+    ekw = dict(paged=True, page_size=PS) if paged else {}
+    ref = _gen(model, params, _cfg(temperature=temperature), prompt, **ekw)
+    one = _gen(model, params,
+               _cfg(temperature=temperature, cache_prompt_interval=1),
+               prompt, **ekw)
+    np.testing.assert_array_equal(ref, one)
+
+
+def test_all_full_refreshes_bit_identical_to_uncached(small_model):
+    """With the cache ON but prompt_refresh_period >= steps-per-block every
+    scheduled refresh is block-initial, hence FULL: the live machinery
+    (feature planes, lifetime branch split, stats) must not perturb a
+    single token."""
+    cfg, model, params = small_model
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (2, PROMPT_LEN),
+                                0, cfg.vocab_size)
+    ref = _gen(model, params, _cfg(prompt_refresh_period=8), prompt)
+    on = _gen(model, params,
+              _cfg(prompt_refresh_period=8, cache_prompt_interval=4), prompt)
+    np.testing.assert_array_equal(ref, on)
+
+
+def test_cached_generate_dense_equals_paged(small_model):
+    cfg, model, params = small_model
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (2, PROMPT_LEN),
+                                0, cfg.vocab_size)
+    g = _cfg(cache_prompt_interval=2)
+    dense = _gen(model, params, g, prompt)
+    paged = _gen(model, params, g, prompt, paged=True, page_size=PS)
+    np.testing.assert_array_equal(dense, paged)
+
+
+# ---------------------------------------------------------------------------
+# variation kernel parity
+# ---------------------------------------------------------------------------
+
+
+def test_variation_score_xla_matches_pallas_interpret():
+    k = jax.random.PRNGKey(3)
+    h_new = jax.random.normal(k, (3, 24, 16), jnp.float32)
+    h_old = h_new + 0.1 * jax.random.normal(jax.random.fold_in(k, 1),
+                                            (3, 24, 16), jnp.float32)
+    h_old = h_old.at[:, 0].set(0.0)       # cold row: cos := 0, max variation
+    conf = jax.random.uniform(jax.random.fold_in(k, 2), (3, 24), jnp.float32)
+    x = ops.variation_score(h_new, h_old, conf, alpha=0.5, impl="xla")
+    p = ops.variation_score(h_new, h_old, conf, alpha=0.5, impl="pallas",
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(p), atol=1e-6)
+    # zeroed cached feature => cosine term contributes its maximum
+    assert np.all(np.asarray(x)[:, 0] >= 0.5 * np.asarray(conf)[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# serving: mid-cycle admission + gathered-subset refresh
+# ---------------------------------------------------------------------------
+
+
+def _serve(model, params, gcfg, reqs, **skw):
+    sched = StreamScheduler(model, params, gcfg, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            early_advance=True, **skw)
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
+    by_id = {r.request_id: r.output for r in done}
+    return [by_id[r.request_id] for r in reqs], sched
+
+
+def test_cached_serving_equals_offline_replay(small_model):
+    """Early-advance serving (staggered, mid-cycle admissions over 2 slots
+    for 5 requests) with the adaptive cache ON replays each request
+    bit-identically offline — the cache planes are per-row state carried
+    exactly like kv_valid."""
+    cfg, model, params = small_model
+    g = _cfg(cache_prompt_interval=2)
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(3, cfg.vocab_size, PROMPT_LEN)
+                    .astype(np.int32)) for _ in range(5)]
+    outs, sched = _serve(model, params, g, reqs)
+    assert sched.engine.step_trace_count == 1, \
+        "cached serving must still reuse ONE compiled step program"
+    eng = DiffusionEngine(model, g, paged=True, page_size=PS)
+    ref = np.asarray(eng.generate(
+        params, jnp.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0)))
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(outs[i], ref[i, PROMPT_LEN:])
+    # the refresh gauges saw traffic: partial refreshes skipped some
+    # eligible rows (hit > 0) and full ones counted everything
+    assert sched.stats.cache_eligible_total > 0
+    assert 0.0 < sched.stats.cache_hit_fraction < 1.0
+    assert sched.stats.tokens_refreshed_p50 > 0
+
+
+def test_gather_refresh_bit_identical(small_model):
+    """The gathered-subset (compact) prompt refresh is a pure execution-plan
+    change: outputs must match the ungathered scheduler bit for bit, cache
+    on or off."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(3, cfg.vocab_size,
+                            int(rng.integers(4, PROMPT_LEN + 1)))
+               .astype(np.int32) for _ in range(5)]
+    for g in (_cfg(), _cfg(cache_prompt_interval=2)):
+        mk = lambda: [Request(prompt=p.copy(), sample_seed=i)
+                      for i, p in enumerate(prompts)]
+        plain, _ = _serve(model, params, g, mk())
+        compact, _ = _serve(model, params, g, mk(), gather_refresh=True)
+        for a, b in zip(plain, compact):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# cadence truth
+# ---------------------------------------------------------------------------
+
+
+def test_full_refresh_cadence():
+    g = _cfg(prompt_refresh_period=2, cache_prompt_interval=2)
+    spb = g.resolved_steps()            # 8 -> refreshes at t = 0, 2, 4, 6
+    iters = np.arange(2 * spb)
+    full = np.asarray(full_refresh_pred(g, iters))
+    # 4 refreshes per block, every 2nd FULL; block-initial always FULL
+    assert full[[0, 4, 8, 12]].all()
+    assert not full[[2, 6, 10, 14]].any()
+    br = np.asarray(branch_index(g, iters % spb, iters))
+    assert br.tolist()[:8] == [2, 0, 3, 0, 2, 0, 3, 0]
+    # disabled: every refresh full, branch 3 never emitted
+    g0 = _cfg(prompt_refresh_period=2)
+    assert np.asarray(full_refresh_pred(g0, iters)).all()
+    assert set(np.asarray(branch_index(g0, iters % spb, iters)).tolist()) \
+        <= {0, 1, 2}
+
+
+def test_adaptive_cache_gating(small_model):
+    """The cache requires es mode on an attention-only period-1 stack with
+    at least one skip stage (the probe boundary)."""
+    cfg, model, params = small_model
+    with pytest.raises(AssertionError):
+        DiffusionEngine(model, _cfg(mode="vanilla", skip_stages=(),
+                                    cache_prompt_interval=2))
+    with pytest.raises(AssertionError):
+        DiffusionEngine(model, _cfg(skip_stages=(),
+                                    cache_prompt_interval=2))
+    with pytest.raises(AssertionError):
+        DiffusionEngine(model, _cfg(cache_prompt_interval=2),
+                        gather_refresh=True)   # gather_refresh needs paged

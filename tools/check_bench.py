@@ -27,6 +27,14 @@ regress regardless of machine speed:
     ``early_advance.early.p95 < early_advance.aligned.p95`` (the win the
     mixed-mode step exists for, measured at equal pool bytes on the same
     trace)
+and the adaptive feature cache's own pair, which is SELF-normalized (the
+cached and uncached runs share one model, trace, and pool, so their ratio
+is machine-independent without the lock-step proxy):
+  * ``feature_cache.goodput_gain`` — cached over uncached goodput at equal
+    pool bytes; a >``--tol`` drop below the baseline gain fails
+  * ``feature_cache.greedy_agreement`` — the quality floor: the cached
+    run's greedy agreement with the uncached replay must stay at or above
+    ``AGREEMENT_FLOOR`` (equivalently, quality_delta stays bounded)
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -46,6 +54,16 @@ GUARDED = (
     "paged.goodput",
     "early_advance.early.goodput",
 )
+
+# same-run ratios (already machine-normalized): guarded against the
+# baseline with the same --tol, no lock-step division
+GUARDED_GAINS = (
+    "feature_cache.goodput_gain",
+)
+
+# minimum greedy agreement of the cached run vs the uncached replay —
+# the adaptive cache may not trade more than this much quality for speed
+AGREEMENT_FLOOR = 0.80
 
 
 def _get(d: dict, path: str):
@@ -82,6 +100,28 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"{path}: speedup over same-run lock-step {n:.2f}x regressed "
                 f"more than {tol:.0%} below the baseline {b:.2f}x "
                 f"(floor {floor:.2f}x)")
+    for path in GUARDED_GAINS:
+        n, b = _get(new, path), _get(base, path)
+        if b is None:
+            continue
+        if n is None:
+            errors.append(f"{path}: missing from the new result "
+                          f"(baseline was {b:.2f}x)")
+            continue
+        floor = b * (1.0 - tol)
+        if n < floor:
+            errors.append(
+                f"{path}: same-run gain {n:.2f}x regressed more than "
+                f"{tol:.0%} below the baseline {b:.2f}x (floor {floor:.2f}x)")
+    fc = new.get("feature_cache")
+    if fc is not None:
+        agr = fc.get("greedy_agreement")
+        if agr is None or agr < AGREEMENT_FLOOR:
+            errors.append(
+                f"feature_cache.greedy_agreement "
+                f"{'missing' if agr is None else f'{agr:.3f}'} is below the "
+                f"quality floor {AGREEMENT_FLOOR:.2f} "
+                f"(quality_delta {fc.get('quality_delta')})")
     ea = new.get("early_advance")
     if ea is not None:
         if not ea.get("outputs_bit_identical"):
@@ -115,6 +155,15 @@ def main() -> int:
         if n is not None and b is not None:
             print(f"  {path} / lockstep.goodput: {b:.2f}x -> {n:.2f}x "
                   f"({n / b:.2f} of baseline ratio)")
+    for path in GUARDED_GAINS:
+        n, b = _get(new, path), _get(base, path)
+        if n is not None and b is not None:
+            print(f"  {path}: {b:.2f}x -> {n:.2f}x "
+                  f"({n / b:.2f} of baseline)")
+    fc = new.get("feature_cache")
+    if fc is not None and fc.get("greedy_agreement") is not None:
+        print(f"  feature_cache.greedy_agreement: "
+              f"{fc['greedy_agreement']:.3f} (floor {AGREEMENT_FLOOR:.2f})")
     if errors:
         print("serving-bench regression guard FAILED:", file=sys.stderr)
         for e in errors:
