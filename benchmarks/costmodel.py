@@ -212,6 +212,61 @@ def prefix_sharing_report(cfg: ModelConfig, *, pool_pages: int,
     }
 
 
+def suffix_window_report(cfg: ModelConfig, gen: GenerationConfig, *,
+                         pool_pages: int, page_size: int,
+                         prompt_len: int) -> dict:
+    """Analytic admission/compute bounds for lazy reservation + the sliding
+    active window (Streaming-dLLM suffix pruning).
+
+    Pages: a full-prompt request's whole extent spans ``pages_full`` pool
+    pages; lazy admission maps only prompt + one active window
+    (``pages_admit``) and defers the rest (``pages_deferred`` each).  The
+    no-deadlock reserve policy keeps the free list covering one max deficit,
+    so at EQUAL pool bytes the steady-state concurrency bounds are
+    ``pool // pages_full`` (eager) vs ``(pool - deficit) // pages_admit``
+    (lazy) — their ratio is the capacity headroom the serving benchmark's
+    measured ``resident_peak`` should approach.
+
+    Compute: the window caps every block's attended KV length at
+    ``bs + block_length * (1 + window_blocks)`` instead of the full
+    ``t_total``, so per-iteration attention score FLOPs (and streamed KV
+    bytes) scale with the window, not ``gen_length``.  Reported per request
+    as the mean over its blocks — the measured bench section asserts
+    against these exact numbers."""
+    assert gen.windowed, "suffix_window_report needs window_blocks > 0"
+    lb = gen.block_length
+    n_blocks = gen.gen_length // lb
+    t_total = prompt_len + gen.gen_length
+    pages_full = -(-t_total // page_size)
+    init_blocks = min(1 + gen.window_blocks, n_blocks)
+    pages_admit = -(-(prompt_len + init_blocks * lb) // page_size)
+    deficit = pages_full - pages_admit
+    bound_full = pool_pages // pages_full
+    bound_lazy = max((pool_pages - deficit) // pages_admit, 0)
+    n_attn = sum(1 for l in range(cfg.n_layers)
+                 if cfg.layer_kind(l) in ("attn", "selfcross"))
+    kv_full = [t_total] * n_blocks
+    kv_win = [min(prompt_len + (i + 1 + gen.window_blocks) * lb, t_total)
+              for i in range(n_blocks)]
+    flops = lambda kv: lb * n_attn * sum(
+        _attn_score_flops(cfg, k) for k in kv) / n_blocks
+    return {
+        "pages_full": pages_full,
+        "pages_admit": pages_admit,
+        "pages_deferred": deficit,
+        "bound_full": bound_full,
+        "bound_lazy": bound_lazy,
+        "bound_gain": bound_lazy / max(bound_full, 1),
+        "attn_flops_per_iter_full": flops(kv_full),
+        "attn_flops_per_iter_windowed": flops(kv_win),
+        "attn_flops_ratio": flops(kv_full) / max(flops(kv_win), 1.0),
+        "kv_bytes_per_iter_full": kv_bytes_per_decode_iter(
+            cfg, sum(kv_full) / n_blocks),
+        "kv_bytes_per_iter_windowed": kv_bytes_per_decode_iter(
+            cfg, sum(kv_win) / n_blocks),
+    }
+
+
 # ---------------------------------------------------------------------------
 # step costs
 # ---------------------------------------------------------------------------

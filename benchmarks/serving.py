@@ -54,6 +54,19 @@ the top-fraction most-varied past tokens.  Reported: goodput gain, the
 scheduler's cache-hit gauges, and the quality delta (greedy agreement of the
 cached outputs against the uncached replay of the same trace).
 
+A seventh pair of runs measures **suffix pruning + dynamic generation
+windows** (Streaming-dLLM) on a long-generation Poisson trace at EQUAL pool
+bytes: the eager baseline reserves every request's full extent at admission
+(windowing off), so a pool one page short of three extents is page-gated at
+2 resident; the windowed run masks attention beyond a 5-block sliding window,
+admits with prompt + window pages only (``lazy_reserve``), and maps the
+deferred far suffix just-in-time as each row's window slides — admitted
+concurrency rises >= 1.5x at the same bytes, growth-denied rows stall
+(never killed),
+and the costmodel's ``suffix_window_report`` supplies the analytic
+admission/FLOP bounds the measured gauges are asserted against.  Quality is
+the greedy agreement of windowed outputs vs the unwindowed replay.
+
 The harness entry (``benchmarks.run``) always writes ``BENCH_serving.json``
 next to the CWD so the perf trajectory accumulates per commit (the README
 documents every field); the CLI writes JSON only where ``--json`` points.
@@ -88,6 +101,17 @@ CACHE_PROMPT_INTERVAL = 8       # 1 FULL + 7 PARTIAL refreshes per block
 CACHE_REFRESH_FRACTION = 0.03125  # top-R share a partial refresh recomputes
 CACHE_N_LAYERS = 8              # deeper stack for the feature-cache section
 CACHE_STAGES = (1, 2)           # skip boundaries -> probe is 1/8 of the stack
+SW_GEN_LENGTH = 64              # suffix-window trace: 8 blocks of generation
+SW_PROMPT_LEN = 16              # t_total = 80 -> 10 vpages per full extent
+SW_WINDOW_BLOCKS = 5            # attend current block + 5 look-ahead blocks:
+                                # admission maps 8 of 10 vpages and the mask
+                                # drops <= 20% of the attended context at
+                                # block 0, keeping greedy agreement with the
+                                # unwindowed replay above the 0.80 floor
+SW_POOL_PAGES = 29              # allocatable pages: one page short of three
+                                # full extents, so eager reservation gates
+                                # at 2 resident while lazy admission (8
+                                # pages + 2-page deficit each) fits 3 (1.5x)
 
 
 def _mk_requests(bm, n: int, seed: int = 0) -> list[Request]:
@@ -271,6 +295,53 @@ def _run_feature_cache(bm, gcfg: GenerationConfig, reqs, arrivals, *,
     }
 
 
+def _mk_window_requests(bm, n: int, seed: int = 11) -> list[Request]:
+    """Full-length greedy requests running the whole long gen_length — the
+    regime where eager reservation pins the most far-suffix pages."""
+    rng = np.random.default_rng(seed)
+    vocab = bm.model.cfg.vocab_size
+    return [Request(prompt=rng.integers(3, vocab, SW_PROMPT_LEN
+                                        ).astype(np.int32),
+                    sample_seed=i) for i in range(n)]
+
+
+def _run_suffix_window(bm, gcfg: GenerationConfig, reqs, arrivals, *,
+                       kv_pages: int, lazy: bool) -> dict:
+    """Replay the long-generation trace through the early-advance paged
+    scheduler: eager full reservation (windowing off) vs lazy reservation +
+    sliding window, at EQUAL pool bytes (same kv_pages)."""
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=2 * SLOTS,
+                            prompt_len=SW_PROMPT_LEN, paged=True,
+                            page_size=PAGE_SIZE, kv_pages=kv_pages,
+                            early_advance=True, lazy_reserve=lazy)
+    sched.submit(Request(prompt=reqs[0].prompt.copy()))
+    sched.drain()                                   # warm the compile cache
+    pages_total = sched.stats.pages_total
+    sched.stats.__init__()
+    sched.stats.pages_total = pages_total
+    warm_steps = sched._step_count
+    makespan = _replay(sched.submit, sched.step,
+                       lambda: not sched.has_work(), arrivals, reqs)
+    lat = np.asarray(sched.stats.latencies_s)
+    return {
+        "windowed": gcfg.windowed,
+        "lazy_reserve": lazy,
+        "goodput": sched.stats.tokens_out / makespan,
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "makespan": makespan,
+        "completed": sched.stats.completed,
+        "engine_steps": sched._step_count - warm_steps,
+        "step_traces": sched.engine.step_trace_count,
+        "admitted_concurrency": sched.stats.resident_peak,
+        "pages_total": pages_total,
+        "peak_pages_in_use": sched.stats.peak_pages_in_use,
+        "pages_deferred": sched.stats.pages_deferred,
+        "window_stalls": sched.stats.window_stalls,
+        "outputs": [r.output.tolist() for r in reqs],
+    }
+
+
 def _run_dup_prefix(bm, gcfg: GenerationConfig, *, sharing: bool) -> dict:
     """Burst of identical greedy 1-block requests at a pool sized for TWO
     unshared requests: admitted concurrency is purely page-gated, so the
@@ -410,6 +481,46 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
         "greedy_agreement": greedy_agreement,
         "quality_delta": 1.0 - greedy_agreement,
     }
+    # suffix pruning + dynamic windows: long-generation trace at EQUAL pool
+    # bytes — SW_POOL_PAGES allocatable pages page-gate eager full-extent
+    # admission at 2 residents, while lazy windowed admission maps prompt +
+    # one active window and fits 3 (1.5x), growing the deferred far suffix
+    # just-in-time
+    sw_pages = SW_POOL_PAGES + 1    # + the scheduler's garbage page
+    sw_base_cfg = gen_cfg(bm, "es", gen_length=SW_GEN_LENGTH,
+                          block_length=BLOCK_LENGTH)
+    sw_win_cfg = gen_cfg(bm, "es", gen_length=SW_GEN_LENGTH,
+                         block_length=BLOCK_LENGTH,
+                         window_blocks=SW_WINDOW_BLOCKS)
+    sw_arrivals = _poisson_arrivals(n_requests, mean_ia, seed=3)
+    sw_base = _run_suffix_window(bm, sw_base_cfg,
+                                 _mk_window_requests(bm, n_requests),
+                                 sw_arrivals, kv_pages=sw_pages, lazy=False)
+    sw_win = _run_suffix_window(bm, sw_win_cfg,
+                                _mk_window_requests(bm, n_requests),
+                                sw_arrivals, kv_pages=sw_pages, lazy=True)
+    out_full = np.asarray(sw_base.pop("outputs"))
+    out_win = np.asarray(sw_win.pop("outputs"))
+    sw_bound = costmodel.suffix_window_report(
+        bm.model.cfg, sw_win_cfg, pool_pages=sw_pages - 1,
+        page_size=PAGE_SIZE, prompt_len=SW_PROMPT_LEN)
+    # the measured lazy accounting must match the analytic report exactly
+    # (plain raise, not assert: the gate must survive python -O)
+    if sw_win["pages_deferred"] != n_requests * sw_bound["pages_deferred"]:
+        raise RuntimeError(
+            f"lazy admission deferred {sw_win['pages_deferred']} pages, "
+            f"analytic says {n_requests * sw_bound['pages_deferred']}")
+    if sw_base["pages_deferred"] != 0 or sw_base["window_stalls"] != 0:
+        raise RuntimeError("eager baseline touched the lazy gauges")
+    suffix_window = {
+        "full": sw_base,
+        "windowed": sw_win,
+        "concurrency_gain": sw_win["admitted_concurrency"]
+        / max(sw_base["admitted_concurrency"], 1),
+        "goodput_gain": sw_win["goodput"] / max(sw_base["goodput"], 1e-9),
+        "greedy_agreement": float((out_full == out_win).mean()),
+        "bound": sw_bound,
+    }
     # duplicate-prefix burst: sharing off vs on at EQUAL pool bytes
     dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
     dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
@@ -431,7 +542,7 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
     }
     return {"lockstep": lock, "stream": stream, "paged": paged,
             "early_advance": early_advance, "feature_cache": feature_cache,
-            "dup_prefix": dup, "kv": kv_report,
+            "suffix_window": suffix_window, "dup_prefix": dup, "kv": kv_report,
             "mean_interarrival_s": mean_ia}
 
 
@@ -445,7 +556,11 @@ def _write_json(res: dict, path: str) -> None:
                    "long_prompt_len": LONG_PROMPT_LEN,
                    "cache_gen_length": CACHE_GEN_LENGTH,
                    "cache_prompt_interval": CACHE_PROMPT_INTERVAL,
-                   "cache_refresh_fraction": CACHE_REFRESH_FRACTION},
+                   "cache_refresh_fraction": CACHE_REFRESH_FRACTION,
+                   "sw_gen_length": SW_GEN_LENGTH,
+                   "sw_prompt_len": SW_PROMPT_LEN,
+                   "sw_window_blocks": SW_WINDOW_BLOCKS,
+                   "sw_pool_pages": SW_POOL_PAGES},
         **res,
     }
     with open(path, "w") as f:
@@ -498,6 +613,19 @@ def run(rows: list) -> None:
         f"refresh_p50={fc['cached']['tokens_refreshed_p50']:.0f} "
         f"agreement={fc['greedy_agreement']:.3f} at equal pool bytes "
         f"(long-prompt trace, refresh every iteration)",
+    ))
+    sw = res["suffix_window"]
+    rows.append((
+        "serving/suffix_window", dt * 1e6 / 4,
+        f"concurrency={sw['full']['admitted_concurrency']}->"
+        f"{sw['windowed']['admitted_concurrency']} "
+        f"({sw['concurrency_gain']:.2f}x, bound "
+        f"{sw['bound']['bound_gain']:.2f}x) "
+        f"goodput={sw['full']['goodput']:.2f}->"
+        f"{sw['windowed']['goodput']:.2f}tok/s ({sw['goodput_gain']:.2f}x) "
+        f"deferred={sw['windowed']['pages_deferred']} "
+        f"stalls={sw['windowed']['window_stalls']} "
+        f"agreement={sw['greedy_agreement']:.3f} at equal pool bytes",
     ))
     dup = res["dup_prefix"]
     rows.append((
@@ -555,6 +683,17 @@ def main() -> None:
           f"tokens refreshed p50 {fc['cached']['tokens_refreshed_p50']:.0f}, "
           f"greedy agreement {fc['greedy_agreement']:.3f} "
           f"(quality delta {fc['quality_delta']:.3f})")
+    sw = res["suffix_window"]
+    print(f"suffix-window (long generations, equal pool bytes): admitted "
+          f"concurrency {sw['full']['admitted_concurrency']} -> "
+          f"{sw['windowed']['admitted_concurrency']} "
+          f"({sw['concurrency_gain']:.2f}x measured, "
+          f"{sw['bound']['bound_gain']:.2f}x analytic bound), goodput "
+          f"{sw['full']['goodput']:.2f} -> {sw['windowed']['goodput']:.2f} "
+          f"tok/s ({sw['goodput_gain']:.2f}x), "
+          f"{sw['windowed']['pages_deferred']} pages deferred, "
+          f"{sw['windowed']['window_stalls']} stalls (resumed, never killed), "
+          f"greedy agreement {sw['greedy_agreement']:.3f}")
     dup = res["dup_prefix"]
     print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal pool "
           f"bytes): admitted concurrency "

@@ -206,12 +206,24 @@ class GenerationConfig:
     cache_refresh_fraction: float = 0.25
     cache_variation_threshold: float = 0.0
 
+    # sliding active-window attention (Streaming-dLLM, PAPERS.md): positions
+    # more than ``window_blocks`` blocks past the current block's end are
+    # masked out of every attention read (and, in the paged serving path,
+    # their pages are never mapped until the window reaches them).  0 means
+    # unbounded (the ``window_blocks=∞`` mode): the clamp is compiled out and
+    # the program is structurally identical to the unwindowed engine.
+    window_blocks: int = 0
+
     def resolved_steps(self) -> int:
         return self.steps_per_block or self.block_length
 
     @property
     def adaptive_cache(self) -> bool:
         return self.cache_prompt_interval > 1
+
+    @property
+    def windowed(self) -> bool:
+        return self.window_blocks > 0
 
 
 def default_skip_stages(n_layers: int, ratio: float = 0.5) -> tuple[SkipStage, ...]:

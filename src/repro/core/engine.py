@@ -103,6 +103,7 @@ from repro.core.schedule import (
     full_refresh_pred as resolve_full_refresh_pred,
     prompt_refresh_pred as resolve_refresh_pred,
     resolve_segments,
+    window_limit as resolve_window_limit,
 )
 from repro.kernels import ops
 from repro.models.model import ForwardCtx, Model
@@ -320,6 +321,16 @@ class DiffusionEngine:
         return jax.vmap(
             lambda s, i: jax.random.fold_in(jax.random.fold_in(key, s), i)
         )(seeds, iters)
+
+    def _window_limit(self, bs) -> Optional[jax.Array]:
+        """[B] exclusive sliding-window horizon for rows at block offset
+        ``bs`` (``core.schedule.window_limit``), or None when windowing is
+        disabled (``window_blocks == 0``) so the clamp is compiled out and
+        the program is structurally identical to the unwindowed engine.
+        Every step derives the horizon from the row's own ``bs``, so the
+        offline block loop, the mixed-mode serving step, and the compacted
+        gather-refresh pass (which gathers ``bs``) share one truth."""
+        return resolve_window_limit(self.gen, bs)
 
     def _kv_pos(self, kv_valid, prompt_start) -> jax.Array:
         """[B, T] cache-validity positions: -1 for sparse-evicted rows and
@@ -906,7 +917,7 @@ class DiffusionEngine:
             "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
             block_start=bs, enc_out=enc_out,
             block_tables=block_tables, page_size=self.page_size,
-            scatter_mask=row_mask,
+            scatter_mask=row_mask, window_limit=self._window_limit(bs),
         )
         hidden = []
         feat = st.feat
@@ -964,12 +975,13 @@ class DiffusionEngine:
         hidden = list(st.hidden)
         conf_cache = st.conf
 
+        wl = self._window_limit(bs)
         for seg in self.segments:
             ctx = self._ctx(
                 "decode", bs[:, None] + s_idx, kv_pos=kv_pos,
                 slot_idx=bs[:, None] + s_idx, block_idx=s_idx,
                 block_tables=block_tables, page_size=self.page_size,
-                scatter_mask=row_mask,
+                scatter_mask=row_mask, window_limit=wl,
             )
             out = model.run_layers(params, h, ctx, caches,
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)
@@ -1012,6 +1024,13 @@ class DiffusionEngine:
         t_total = st.tokens.shape[1]
         col = jnp.arange(t_total, dtype=jnp.int32)[None]
         eligible = st.kv_valid & ~in_block & (col >= prompt_start[:, None])
+        wl = self._window_limit(bs)
+        if wl is not None:
+            # beyond-window positions are masked from every attention read,
+            # so refreshing them buys nothing — and in lazy serving their
+            # pages may not be mapped yet (the offline identity table IS
+            # mapped there, so the clamp keeps serving == offline replay)
+            eligible &= col < wl[:, None]
         if self.paged:
             eligible &= jnp.repeat(block_tables >= 0, self.page_size, axis=1)
         return eligible
@@ -1049,11 +1068,12 @@ class DiffusionEngine:
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None],
                                (b, t_total))
+        wl = self._window_limit(bs)
         ctx = self._ctx(
             "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
             block_start=bs, enc_out=enc_out,
             block_tables=block_tables, page_size=self.page_size,
-            scatter_mask=row_mask,
+            scatter_mask=row_mask, window_limit=wl,
         )
         out = model.run_layers(params, h, ctx, st.caches,
                                group_lo=0, group_hi=gp)
@@ -1083,7 +1103,7 @@ class DiffusionEngine:
         dctx = self._ctx(
             "decode", sel, kv_pos=kv_pos, slot_idx=sel,
             block_tables=block_tables, page_size=self.page_size,
-            scatter_mask=row_mask, refresh_mask=tok_ok,
+            scatter_mask=row_mask, refresh_mask=tok_ok, window_limit=wl,
         )
         out = model.run_layers(params, h_sel, dctx, caches,
                                group_lo=gp, group_hi=model.n_groups)
@@ -1223,6 +1243,12 @@ class DiffusionEngine:
         if block_tables is not None:               # paged: pool -> dense view
             kcache = ops.gather_pages(kcache, block_tables)
             attendable &= jnp.repeat(block_tables >= 0, self.page_size, axis=1)
+        wl = self._window_limit(bs)
+        if wl is not None:
+            # the probe must rank only window-visible rows: beyond-horizon
+            # K rows are garbage in lazy serving (unmapped) but real in the
+            # offline identity layout — clamping both keeps them bit-equal
+            attendable &= col < wl[:, None]
         group = cfg.n_heads // cfg.n_kv_heads
         kk = jnp.repeat(jnp.swapaxes(kcache, 1, 2), group, axis=1)   # [B, Hq, T, Dh]
         scores = jnp.einsum(

@@ -79,6 +79,27 @@ def branch_index(gen: GenerationConfig, t, iters=None):
                      jnp.where(block_r, 1, 0)).astype(jnp.int32)
 
 
+def window_limit(gen: GenerationConfig, bs):
+    """Per-row exclusive attention horizon for the sliding active window.
+
+    A row whose current block starts at ``bs`` may attend positions
+    ``< bs + block_length * (1 + window_blocks)`` — the current block plus
+    ``window_blocks`` look-ahead blocks of masked suffix.  Prompt and
+    unmasked history sit below ``bs`` and are never cut by the window (the
+    ``kv_valid`` / sparse-eviction planes govern those).  Returns ``None``
+    when windowing is disabled (``window_blocks == 0`` = the ∞ mode) so
+    every caller compiles the clamp out and the program stays structurally
+    identical to the unwindowed engine.  Elementwise like
+    :func:`prompt_refresh_pred`: ``bs`` may be a python int, a numpy array,
+    or a traced ``[B]`` jax array — the offline block loop, the mixed-mode
+    serving step, and the host-side scheduler's page-frontier accounting
+    all derive the window from this one function and cannot drift apart.
+    """
+    if not gen.windowed:
+        return None
+    return bs + gen.block_length * (1 + gen.window_blocks)
+
+
 @dataclasses.dataclass(frozen=True)
 class Segment:
     group_lo: int

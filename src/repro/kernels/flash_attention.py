@@ -47,6 +47,31 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def window_block_tables(block_tables: jax.Array, limit: jax.Array | None,
+                        page_size: int) -> jax.Array:
+    """Windowed READ view of a block table: virtual pages whose first
+    sequence position sits at or beyond the per-row exclusive horizon
+    ``limit [B]`` are forced to -1.
+
+    This is how the sliding active window reaches the paged kernel's
+    block-table walk without touching the kernel body: a -1 entry clamps to
+    the garbage page 0 in ``_page`` and its positions are already dead via
+    ``ops.paged_kv_mask`` / ``ops.window_kv_clamp`` — and because consecutive
+    -1 vpages repeat the same physical block, the Pallas pipeline elides the
+    redundant DMA, so per-iteration KV HBM traffic scales with the window,
+    not ``gen_length``.  A page straddling the horizon stays mapped (its
+    beyond-limit positions are still position-masked), so the view only
+    drops pages that contribute nothing.  Scatters keep the ORIGINAL table:
+    beyond-window writes land on real pages but are rewritten by the next
+    block's full prefill before any read can see them.  ``limit=None`` is
+    the identity."""
+    if limit is None:
+        return block_tables
+    n_vp = block_tables.shape[1]
+    starts = jnp.arange(n_vp, dtype=jnp.int32) * page_size
+    return jnp.where(starts[None, :] < limit[:, None], block_tables, -1)
+
+
 def _flash_kernel(
     qpos_ref,   # [1, bq] int32
     kvpos_ref,  # [1, bk] int32

@@ -22,6 +22,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import (
     flash_attention_kernel,
     paged_flash_attention_kernel,
+    window_block_tables,
 )
 from repro.kernels.importance import importance_kernel, variation_kernel
 from repro.kernels.scatter_kv import (
@@ -256,6 +257,20 @@ def paged_kv_mask(block_tables: jax.Array, kv_pos: jax.Array, page_size: int) ->
     """Force kv_pos to -1 wherever the virtual page is unmapped."""
     mapped = jnp.repeat(block_tables >= 0, page_size, axis=1)
     return jnp.where(mapped, kv_pos, -1)
+
+
+def window_kv_clamp(kv_pos: jax.Array, limit: jax.Array | None) -> jax.Array:
+    """Sliding active-window cut: force kv_pos to -1 at positions beyond the
+    per-row exclusive horizon ``limit [B]`` (``core.schedule.window_limit``).
+
+    Every attention path already masks ``kv_pos < 0`` (padding, unfilled
+    rows, unmapped pages), so one clamp at the ``self_attention`` entry makes
+    the window identical through the dense XLA path, the chunked lowering,
+    and both Pallas kernels — no kernel-body change, and ``limit=None``
+    (windowing disabled) is the identity."""
+    if limit is None:
+        return kv_pos
+    return jnp.where(kv_pos < limit[:, None], kv_pos, -1)
 
 
 def paged_attention(
@@ -656,6 +671,8 @@ __all__ = [
     "paged_attention",
     "gather_pages",
     "paged_kv_mask",
+    "window_kv_clamp",
+    "window_block_tables",
     "validate_page_lanes",
     "ssd",
     "scatter_rows",

@@ -12,6 +12,8 @@ Two runtimes:
   PYTHONPATH=src python -m repro.launch.serve --arch llada-8b --requests 16
   PYTHONPATH=src python -m repro.launch.serve --paged --prefix-sharing \
       --dup-prompts --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --paged --window-blocks 2 \
+      --lazy-reserve --gen-length 64 --requests 8
 """
 from __future__ import annotations
 
@@ -79,6 +81,15 @@ def main() -> None:
                     help="compact refreshing rows into a half-width prefill "
                          "when at most half the slots refresh together "
                          "(requires --paged)")
+    ap.add_argument("--window-blocks", type=int, default=0,
+                    help="sliding active window: attention reads at most "
+                         "this many generation blocks past the current one "
+                         "(0 = unbounded, windowing compiled out)")
+    ap.add_argument("--lazy-reserve", action="store_true",
+                    help="defer far-suffix page reservation: admission maps "
+                         "prompt + one active window, the rest grows "
+                         "just-in-time as the window slides (requires "
+                         "--paged and --window-blocks > 0)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -97,6 +108,7 @@ def main() -> None:
         parallel_decoding=args.parallel_decoding,
         cache_prompt_interval=args.cache_prompt_interval,
         cache_variation_threshold=args.cache_variation_threshold,
+        window_blocks=args.window_blocks,
     )
 
     stream_cb = None
@@ -111,7 +123,8 @@ def main() -> None:
                                  kv_pages=args.kv_pages,
                                  prefix_sharing=args.prefix_sharing,
                                  early_advance=args.early_advance,
-                                 gather_refresh=args.gather_refresh)
+                                 gather_refresh=args.gather_refresh,
+                                 lazy_reserve=args.lazy_reserve)
     else:
         server = BatchServer(model, params, gen, batch_size=args.batch,
                              prompt_len=args.prompt_len)
@@ -148,6 +161,9 @@ def main() -> None:
                 line += f"  cow_forks={server.stats.cow_forks}"
             if gen.sparse_attention:
                 line += f"  pages_reclaimed={server.stats.pages_reclaimed}"
+            if args.lazy_reserve:
+                line += (f"  pages_deferred={server.stats.pages_deferred}"
+                         f"  window_stalls={server.stats.window_stalls}")
     print(line)
     print("sample output:", done[0].output[:24].tolist())
 

@@ -126,6 +126,7 @@ def self_attention(
     use_rope: bool = True,
     scatter_mask: Optional[jax.Array] = None,   # [B] rows whose scatters land
     token_mask: Optional[jax.Array] = None,     # [B, K] tokens whose K/V land
+    window_limit: Optional[jax.Array] = None,   # [B] sliding-window horizon
 ) -> tuple[jax.Array, Optional[KVCache | PagedKVCache]]:
     """Returns (output [B, K, d], updated cache or None).
 
@@ -135,9 +136,20 @@ def self_attention(
     feature cache) gates individual tokens within owned rows — gated-out
     tokens keep their cached K/V (partial refresh).  Attention reads are
     unmasked — unowned rows still compute (one fused program), their
-    outputs are discarded one level up."""
+    outputs are discarded one level up.
+
+    ``window_limit`` (sliding active-window attention) masks cache positions
+    at or beyond the per-row exclusive horizon out of the read: one
+    ``ops.window_kv_clamp`` of ``kv_pos`` at entry covers the dense and
+    paged paths identically (every impl already masks ``kv_pos < 0``), and
+    the paged read additionally walks a windowed block-table view so
+    beyond-horizon pages never move through HBM.  Writes are NOT windowed —
+    the cadence contract (every block entry is a full prefill) rewrites
+    beyond-window rows before any read can see them."""
     b, k, _ = x.shape
     q, kk, vv = _project_qkv(params, cfg, x, positions, rope=use_rope)
+    if window_limit is not None and kv_pos is not None:
+        kv_pos = ops.window_kv_clamp(kv_pos, window_limit)
 
     if isinstance(cache, PagedKVCache):
         assert slot_idx is not None and kv_pos is not None
@@ -145,6 +157,7 @@ def self_attention(
             params, q, kk, vv, cache, positions, slot_idx, kv_pos,
             causal=causal, window=window, anchor=anchor, attn_impl=attn_impl,
             scatter_mask=scatter_mask, token_mask=token_mask,
+            window_limit=window_limit,
         )
 
     k_scale = v_scale = None
@@ -197,6 +210,7 @@ def self_attention(
 def _paged_self_attention(
     params, q, kk, vv, cache: PagedKVCache, positions, slot_idx, kv_pos,
     *, causal, window, anchor, attn_impl, scatter_mask=None, token_mask=None,
+    window_limit=None,
 ) -> tuple[jax.Array, PagedKVCache]:
     """Scatter fresh rows through the block table, attend the page pool.
 
@@ -204,7 +218,12 @@ def _paged_self_attention(
     write view of the block table with those rows forced to -1 (unmapped ⇒
     garbage page) — reads keep the real table.  ``token_mask`` additionally
     gates individual tokens (adaptive partial refresh): gated-out tokens
-    write back their current pool content, an exact no-op."""
+    write back their current pool content, an exact no-op.  ``window_limit``
+    hands the attention READ a windowed block-table view
+    (``ops.window_block_tables``): beyond-horizon vpages read as unmapped,
+    so the kernel's page walk DMA-elides them — scatters keep the real
+    table (the next block's full prefill rewrites those rows before any
+    read)."""
     b, k = slot_idx.shape
     pool, bt, ps = cache.cache, cache.block_tables, cache.page_size
     if pool.quantized:
@@ -233,10 +252,11 @@ def _paged_self_attention(
                                    bt, page_size=ps, row_mask=scatter_mask,
                                    token_mask=token_mask),
         )
+    read_bt = ops.window_block_tables(bt, window_limit, ps)
     out = ops.paged_attention(
         jnp.swapaxes(q, 1, 2),
         pool.k, pool.v,
-        positions, kv_pos, bt,
+        positions, kv_pos, read_bt,
         page_size=ps,
         causal=causal, window=window, anchor=anchor,
         impl=attn_impl,

@@ -75,6 +75,13 @@ class ForwardCtx:
                                               # land (adaptive feature cache:
                                               # a partial refresh recomputes
                                               # only the variation-gated subset)
+    window_limit: Optional[jax.Array] = None  # [B] exclusive sliding-window
+                                              # horizon (core.schedule
+                                              # .window_limit): kv positions
+                                              # >= limit are masked from every
+                                              # attention read; None = the
+                                              # unbounded (∞) mode, clamp
+                                              # compiled out
     enc_out: Optional[jax.Array] = None       # [B, E, d_enc]
     causal: bool = False
     window_override: int = 0                  # long-context windowed variant
@@ -401,7 +408,7 @@ class Model:
                 slot_idx=ctx.slot_idx, kv_pos=ctx.kv_pos,
                 causal=ctx.causal, window=window, anchor=ctx.anchor,
                 attn_impl=ctx.attn_impl, scatter_mask=ctx.scatter_mask,
-                token_mask=ctx.refresh_mask,
+                token_mask=ctx.refresh_mask, window_limit=ctx.window_limit,
             )
             h = h + a
             if isinstance(new_kv, PagedKVCache):

@@ -30,6 +30,15 @@ class Request:
                                            # (paged + max_new_tokens: replay
                                            # with the truncated gen_length —
                                            # see StreamScheduler._pages_needed)
+    max_blocks: Optional[int] = None       # HARD cap on generated blocks,
+                                           # distinct from the soft
+                                           # max_new_tokens/req_blocks hint:
+                                           # under lazy reservation the hint
+                                           # sizes the deficit accounting
+                                           # while max_blocks bounds how far
+                                           # the window may ever grow (the
+                                           # SLO-aware admission hook,
+                                           # ROADMAP item 5)
     # filled by the server / scheduler
     output: Optional[np.ndarray] = None
     latency_s: float = 0.0                 # finish - arrival (queueing incl.)

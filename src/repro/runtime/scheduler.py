@@ -90,6 +90,14 @@ class SchedulerStats:
     pages_reclaimed: int = 0             # pages returned early by page-aligned eviction
     resident_peak: int = 0               # max concurrently admitted requests
     early_advances: int = 0              # block advances before the aligned boundary
+    pages_deferred: int = 0              # far-suffix pages lazy admission did
+                                         # NOT reserve up front (each deferred
+                                         # page is pool capacity other slots
+                                         # can use until the window reaches it)
+    window_stalls: int = 0               # stall events: a row whose window
+                                         # could not map its next pages this
+                                         # step paused (never killed) until
+                                         # growth is granted
     admission_waits: list = dataclasses.field(default_factory=list)
                                          # per-request queue wait (arrival -> admit)
     # adaptive feature cache (0 / empty with the cache disabled).  A FULL
@@ -137,6 +145,8 @@ class SchedulerStats:
             "pages_reclaimed": self.pages_reclaimed,
             "resident_peak": self.resident_peak,
             "early_advances": self.early_advances,
+            "pages_deferred": self.pages_deferred,
+            "window_stalls": self.window_stalls,
             "admission_wait_p50": self.admission_wait_p50,
             "cache_hit_fraction": self.cache_hit_fraction,
             "tokens_refreshed_p50": self.tokens_refreshed_p50,
@@ -268,6 +278,10 @@ class StreamScheduler:
         prefix_sharing: bool = False,       # CoW prompt-page dedup (paged only)
         early_advance: bool = False,        # per-row cadence: any-iteration
                                             # admission + immediate block advance
+        lazy_reserve: bool = False,         # windowed paged mode: admit with
+                                            # prompt + active-window pages only
+                                            # and grow the mapping just-in-time
+                                            # as each row's bs advances
         **engine_kw,
     ):
         assert gen.gen_length % gen.block_length == 0
@@ -284,6 +298,15 @@ class StreamScheduler:
         assert not (prefix_sharing and not paged), \
             "prefix_sharing shares pool pages — it requires paged=True"
         self.prefix_sharing = prefix_sharing
+        assert not (lazy_reserve and not paged), \
+            "lazy_reserve defers pool pages — it requires paged=True"
+        assert not (lazy_reserve and not gen.windowed), \
+            "lazy_reserve needs a finite window (window_blocks > 0): unmapped " \
+            "far-suffix pages are sound only when the window masks them"
+        assert not (lazy_reserve and prefix_sharing), \
+            "lazy_reserve's deficit accounting counts private pages only — " \
+            "combine with prefix_sharing is unsupported (see ARCHITECTURE §1c)"
+        self.lazy_reserve = lazy_reserve
         self.early_advance = early_advance
         engine_kw.setdefault("early_advance", early_advance)
         t_total = prompt_len + gen.gen_length
@@ -309,6 +332,17 @@ class StreamScheduler:
         # one entry per page CLAIM this slot holds (shared pages included —
         # releasing a claim only frees the page when its refcount hits 0)
         self.slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
+        # lazy reservation (window growth) bookkeeping, paged mode only:
+        # extent = the (first_vp, last_vp) the request will EVER map, frontier
+        # = first still-unmapped vp (== last_vp once fully grown), order = the
+        # admission sequence number the no-deadlock growth policy ranks by.
+        self.slot_extent: list[tuple[int, int]] = [(0, 0)] * max_slots
+        self.slot_frontier: list[int] = [0] * max_slots
+        self.slot_order: list[int] = [0] * max_slots
+        self._admit_seq = 0
+        # slots paused by a denied window growth: inactive on device but NOT
+        # retired — _finish_cycle skips them, _grow_windows resumes them
+        self.stalled: set[int] = set()
         # sharing cohorts: {"owner": slot, "slots": {slot: [(vp, page)]},
         # "reserve": {slot: [pages]}, "born": step} — see _admit/_cow_fork
         self.cohorts: list[dict] = []
@@ -409,15 +443,21 @@ class StreamScheduler:
             if req.max_new_tokens is not None:
                 # whole blocks only: the block loop is the progress quantum
                 n_blocks = min(max(-(-req.max_new_tokens // lb), 1), self.n_blocks)
+            if req.max_blocks is not None:
+                # HARD cap, honoured in every mode: under lazy reservation it
+                # bounds the extent the window may ever grow to
+                n_blocks = min(n_blocks, max(req.max_blocks, 1))
             p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
             pages: list[int] = []
             shared_map: list[tuple[int, int]] = []   # [(vp, physical page)]
             reserve: list[int] = []
             share_key = None
             share_hit = None
-            first_vp = last_vp = 0
+            first_vp = last_vp = map_last = 0
+            deficit_new = 0
             if self.allocator is not None:
                 first_vp, last_vp, need = self._pages_needed(len(p), n_blocks)
+                map_last = last_vp
                 vp0 = -(-(self.prompt_len - len(p)) // self.page_size)
                 vp1 = self.prompt_len // self.page_size
                 if (self.prefix_sharing and not self.expects_enc
@@ -435,6 +475,28 @@ class StreamScheduler:
                     reserve = got[need - len(shared_map):]
                     self.allocator.share([pg for _, pg in shared_map])
                 else:
+                    if self.lazy_reserve:
+                        # map prompt + the first active-window's worth of
+                        # blocks only; the rest is a recorded DEFICIT the
+                        # window grows into just-in-time.  No-deadlock gate:
+                        # after this admission the free list must still cover
+                        # the largest single deficit (this request's, or any
+                        # resident row's) so the oldest row can always finish
+                        # growing — the liveness invariant of ARCHITECTURE
+                        # §1c.  A failed gate waits FIFO, like page-gating.
+                        init_blocks = min(1 + self.gen.window_blocks, n_blocks)
+                        init_last = -(-(self.prompt_len + init_blocks * lb)
+                                      // self.page_size)
+                        deficit_new = last_vp - init_last
+                        map_last = init_last
+                        need = init_last - first_vp
+                        resident_deficit = max(
+                            (self.slot_extent[s][1] - self.slot_frontier[s]
+                             for s, r in enumerate(self.slot_req)
+                             if r is not None), default=0)
+                        if self.allocator.free_pages - need < max(
+                                deficit_new, resident_deficit):
+                            break               # reserve-gated: retry later
                     got = self.allocator.alloc(need)
                     if got is None:
                         break                   # page-gated: retry next cycle
@@ -472,7 +534,9 @@ class StreamScheduler:
                 bt_row = np.full((t_total // self.page_size,), -1, np.int32)
                 shared_vps = {vp for vp, _ in shared_map}
                 priv = iter(pages)
-                for vp in range(first_vp, last_vp):
+                # map_last == last_vp except under lazy_reserve, where the
+                # far-suffix [map_last, last_vp) stays unmapped for now
+                for vp in range(first_vp, map_last):
                     if vp not in shared_vps:
                         bt_row[vp] = next(priv)
                 for vp, pg in shared_map:
@@ -499,6 +563,11 @@ class StreamScheduler:
                         my_map = [(vp, int(bt_row[vp]))
                                   for vp in range(vp0, vp1)]
                         self.allocator.register_prefix(share_key, (slot, my_map))
+                self.slot_extent[slot] = (first_vp, last_vp)
+                self.slot_frontier[slot] = map_last
+                self.slot_order[slot] = self._admit_seq
+                self._admit_seq += 1
+                self.stats.pages_deferred += deficit_new
                 self.stats.pages_in_use = self.allocator.used_pages
                 self.stats.peak_pages_in_use = max(
                     self.stats.peak_pages_in_use, self.stats.pages_in_use)
@@ -549,6 +618,13 @@ class StreamScheduler:
         # that scatters into THAT row's prompt pages — per the engine's own
         # per-row cadence
         refresh_rows = self.engine.prompt_refresh_rows(phases) & resident
+        if self.stalled:
+            # a stalled row is frozen (inactive on device, phase drifting):
+            # its phase vector entry no longer describes an upcoming refresh,
+            # so keep it out of the CoW-fork / reclaim hooks until resume
+            stalled_mask = np.zeros(self.max_slots, bool)
+            stalled_mask[list(self.stalled)] = True
+            refresh_rows &= ~stalled_mask
         if self.paged and refresh_rows.any():
             self._cow_fork_before_refresh(refresh_rows)
         pre_blocks_left = np.asarray(self.state.blocks_left)
@@ -581,7 +657,91 @@ class StreamScheduler:
             self._finish_cycle()
         elif bool((np.asarray(self.state.phase) == 0).all()):
             self._finish_cycle()
+        if self.lazy_reserve:
+            # AFTER retirement so pages freed this step are grantable this
+            # step; runs every iteration because aligned mode advances bs at
+            # the phase wrap, not through the early_advance bookkeeping
+            self._grow_windows()
         return True
+
+    # ------------------------------------------------------------------
+    # lazy reservation: just-in-time window growth
+    # ------------------------------------------------------------------
+    def _grow_windows(self) -> None:
+        """Map the next window's pages for every lazily-reserved row whose
+        ``bs`` advanced past its mapped frontier.
+
+        Growth target per row: the pages covering its current attention
+        horizon (``bs + block_length * (1 + window_blocks)``), capped at the
+        row's admission-time extent — rows nearing their last block ask for
+        nothing, so they can never stall near the finish line.
+
+        **No-deadlock policy (max-deficit reserve, ARCHITECTURE §1c):**
+        residents are ranked by admission order; row r is granted g pages iff
+        the free list would still cover every STRICTLY OLDER row's remaining
+        deficit afterwards (for the oldest row that bound is vacuous).
+        Together with the admission gate this keeps the invariant "the free
+        list covers the oldest resident's deficit" — so the oldest row always
+        grows, always finishes, and returns its pages; induction gives every
+        row liveness.  A denied row STALLS (``active=False``, host-side
+        ``stalled`` set, ``window_stalls`` gauge) and is NEVER killed; it
+        resumes — at phase 0, since stalls only ever trigger right after a
+        block advance — the step its grant lands.
+        """
+        residents = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not residents:
+            return
+        bs = np.asarray(self.state.bs)
+        lb = self.gen.block_length
+        wb = self.gen.window_blocks
+        ps = self.page_size
+        order = sorted(residents, key=lambda s: self.slot_order[s])
+        deficit = {s: self.slot_extent[s][1] - self.slot_frontier[s]
+                   for s in order}
+        bt = None
+        resumed: list[int] = []
+        stalled_now: list[int] = []
+        for i, slot in enumerate(order):
+            frontier = self.slot_frontier[slot]
+            extent_last = self.slot_extent[slot][1]
+            limit = int(bs[slot]) + lb * (1 + wb)
+            target = min(-(-limit // ps), extent_last)
+            g = target - frontier
+            if g <= 0:
+                continue
+            older = max((deficit[s] for s in order[:i]), default=0)
+            if self.allocator.free_pages - g >= older:
+                got = self.allocator.alloc(g)       # gate implies it succeeds
+                if bt is None:
+                    bt = np.array(self.state.block_tables)
+                bt[slot, frontier:target] = got
+                self.slot_pages[slot].extend(got)
+                self.slot_frontier[slot] = target
+                deficit[slot] -= g
+                if slot in self.stalled:
+                    self.stalled.discard(slot)
+                    resumed.append(slot)
+            elif slot not in self.stalled:
+                self.stalled.add(slot)
+                self.stats.window_stalls += 1
+                stalled_now.append(slot)
+        st = self.state
+        if bt is not None:
+            st = st._replace(block_tables=jnp.asarray(bt))
+        for slot in resumed:
+            # the engine's phase counter kept ticking while the row was
+            # frozen; the stall hit right after a block advance, where the
+            # phase had wrapped to 0 — pin it back to the prefill entry so
+            # the resumed trajectory is the one an unstalled run would take
+            st = st._replace(active=st.active.at[slot].set(True),
+                             phase=st.phase.at[slot].set(0))
+        for slot in stalled_now:
+            st = st._replace(active=st.active.at[slot].set(False))
+        self.state = st
+        if bt is not None or resumed or stalled_now:
+            self.stats.pages_in_use = self.allocator.used_pages
+            self.stats.peak_pages_in_use = max(
+                self.stats.peak_pages_in_use, self.stats.pages_in_use)
 
     # ------------------------------------------------------------------
     # memory manager v2: CoW fork + page-aligned eviction
@@ -719,6 +879,8 @@ class StreamScheduler:
                     if cb is not None:
                         cb(req, bi, blk)
             self.slot_streamed[slot] = done_blocks
+            if not active[slot] and slot in self.stalled:
+                continue            # paused by _grow_windows, not finished
             if not active[slot]:
                 n_tok = self.slot_blocks[slot] * lb
                 req.output = tokens[slot, self.prompt_len:

@@ -35,6 +35,13 @@ is machine-independent without the lock-step proxy):
   * ``feature_cache.greedy_agreement`` — the quality floor: the cached
     run's greedy agreement with the uncached replay must stay at or above
     ``AGREEMENT_FLOOR`` (equivalently, quality_delta stays bounded)
+and the suffix-window pair (same self-normalized pattern — eager full
+reservation vs lazy windowed at equal pool bytes on one trace):
+  * ``suffix_window.goodput_gain`` and ``suffix_window.concurrency_gain``
+    — a >``--tol`` drop below the baseline gains fails, and the measured
+    concurrency gain must stay at or above ``CONCURRENCY_GAIN_FLOOR``
+  * ``suffix_window.greedy_agreement`` — the windowed run's greedy
+    agreement with the unwindowed replay holds the same quality floor
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -59,11 +66,18 @@ GUARDED = (
 # baseline with the same --tol, no lock-step division
 GUARDED_GAINS = (
     "feature_cache.goodput_gain",
+    "suffix_window.goodput_gain",
+    "suffix_window.concurrency_gain",
 )
 
 # minimum greedy agreement of the cached run vs the uncached replay —
-# the adaptive cache may not trade more than this much quality for speed
+# the adaptive cache may not trade more than this much quality for speed.
+# The suffix-window section holds the same floor (windowed vs unwindowed).
 AGREEMENT_FLOOR = 0.80
+
+# the suffix-window headline: lazy windowed admission must fit at least
+# 1.5x the eager baseline's residents into the same pool bytes
+CONCURRENCY_GAIN_FLOOR = 1.5
 
 
 def _get(d: dict, path: str):
@@ -122,6 +136,21 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"{'missing' if agr is None else f'{agr:.3f}'} is below the "
                 f"quality floor {AGREEMENT_FLOOR:.2f} "
                 f"(quality_delta {fc.get('quality_delta')})")
+    sw = new.get("suffix_window")
+    if sw is not None:
+        agr = sw.get("greedy_agreement")
+        if agr is None or agr < AGREEMENT_FLOOR:
+            errors.append(
+                f"suffix_window.greedy_agreement "
+                f"{'missing' if agr is None else f'{agr:.3f}'} is below the "
+                f"quality floor {AGREEMENT_FLOOR:.2f}")
+        cg = sw.get("concurrency_gain")
+        if cg is None or cg < CONCURRENCY_GAIN_FLOOR:
+            errors.append(
+                f"suffix_window.concurrency_gain "
+                f"{'missing' if cg is None else f'{cg:.2f}x'} is below the "
+                f"floor {CONCURRENCY_GAIN_FLOOR:.2f}x (lazy windowed "
+                f"admission must beat eager reservation at equal pool bytes)")
     ea = new.get("early_advance")
     if ea is not None:
         if not ea.get("outputs_bit_identical"):
@@ -164,6 +193,15 @@ def main() -> int:
     if fc is not None and fc.get("greedy_agreement") is not None:
         print(f"  feature_cache.greedy_agreement: "
               f"{fc['greedy_agreement']:.3f} (floor {AGREEMENT_FLOOR:.2f})")
+    sw = new.get("suffix_window")
+    if sw is not None:
+        if sw.get("greedy_agreement") is not None:
+            print(f"  suffix_window.greedy_agreement: "
+                  f"{sw['greedy_agreement']:.3f} (floor {AGREEMENT_FLOOR:.2f})")
+        if sw.get("concurrency_gain") is not None:
+            print(f"  suffix_window.concurrency_gain: "
+                  f"{sw['concurrency_gain']:.2f}x "
+                  f"(floor {CONCURRENCY_GAIN_FLOOR:.2f}x)")
     if errors:
         print("serving-bench regression guard FAILED:", file=sys.stderr)
         for e in errors:

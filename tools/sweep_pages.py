@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Page-size x window-blocks sweep for the paged serving engine.
+
+The ROADMAP's paged-kernel tuning item: ``page_size`` trades block-table
+granularity against pool fragmentation, and ``window_blocks`` trades
+attended context (quality) against reserved pages (admission concurrency).
+This harness runs the SAME burst trace through the early-advance paged
+scheduler at every grid point and reports, per point:
+
+  * measured goodput / makespan / peak pages / admitted concurrency,
+  * the lazy-reservation gauges (``pages_deferred``, ``window_stalls``)
+    when the point is windowed (``window_blocks > 0`` runs lazy),
+  * greedy agreement against the unwindowed reference at the same
+    page_size (the quality axis of the tradeoff), and
+  * the analytic admission/FLOP bounds from
+    ``costmodel.suffix_window_report`` so measured vs. analytic can be
+    eyeballed in one JSON.
+
+On CPU the absolute numbers are only smoke-level; the point of the tool is
+to be runnable unchanged on a real TPU (where ``page_size`` must satisfy
+the >=128-lane kernel guard) to pick the deployment operating point.
+
+    PYTHONPATH=src python tools/sweep_pages.py \
+        --page-sizes 4,8 --window-blocks 0,1,2 --json sweep_pages.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# runnable as a plain script from the repo root (tools/ is not a package)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import numpy as np  # noqa: E402
+
+from repro.runtime import Request, StreamScheduler  # noqa: E402
+
+from benchmarks import costmodel  # noqa: E402
+from benchmarks.common import build_bench_model, gen_cfg  # noqa: E402
+
+
+def _mk_requests(bm, n: int, prompt_len: int, seed: int) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    vocab = bm.model.cfg.vocab_size
+    return [Request(prompt=rng.integers(3, vocab, prompt_len
+                                        ).astype(np.int32))
+            for _ in range(n)]
+
+
+def _run_point(bm, gcfg, *, n_requests: int, prompt_len: int, slots: int,
+               page_size: int, kv_pages: int, seed: int) -> dict:
+    """Burst-submit the trace and drain it; windowed points run lazy."""
+    lazy = gcfg.windowed
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=slots,
+                            prompt_len=prompt_len, paged=True,
+                            page_size=page_size, kv_pages=kv_pages,
+                            early_advance=True, lazy_reserve=lazy)
+    reqs = _mk_requests(bm, n_requests, prompt_len, seed)
+    sched.submit(Request(prompt=reqs[0].prompt.copy()))
+    sched.drain()                                   # warm the compile cache
+    pages_total = sched.stats.pages_total
+    sched.stats.__init__()
+    sched.stats.pages_total = pages_total
+    t0 = time.monotonic()
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
+    makespan = time.monotonic() - t0
+    assert len(done) == n_requests
+    return {
+        "window_blocks": gcfg.window_blocks,
+        "lazy_reserve": lazy,
+        "goodput": sched.stats.tokens_out / makespan,
+        "makespan": makespan,
+        "engine_steps": sched._step_count,
+        "admitted_concurrency": sched.stats.resident_peak,
+        "pages_total": pages_total,
+        "peak_pages_in_use": sched.stats.peak_pages_in_use,
+        "pages_deferred": sched.stats.pages_deferred,
+        "window_stalls": sched.stats.window_stalls,
+        "outputs": np.stack([r.output for r in reqs]),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llada-8b")
+    ap.add_argument("--page-sizes", default="4,8",
+                    help="comma-separated page sizes to sweep")
+    ap.add_argument("--window-blocks", default="0,1,2",
+                    help="comma-separated window sizes (0 = unbounded "
+                         "reference; always include it — windowed points' "
+                         "agreement is measured against it)")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-length", type=int, default=32)
+    ap.add_argument("--block-length", type=int, default=8)
+    ap.add_argument("--pool-extents", type=float, default=2.0,
+                    help="pool size in full per-request extents (fractional "
+                         "values make admission page-gated)")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--json", default=None, help="write the sweep here")
+    args = ap.parse_args()
+
+    page_sizes = [int(x) for x in args.page_sizes.split(",")]
+    windows = sorted(int(x) for x in args.window_blocks.split(","))
+    bm = build_bench_model(args.arch)
+    t_total = args.prompt_len + args.gen_length
+    grid = []
+    for ps in page_sizes:
+        if t_total % ps or args.prompt_len % ps:
+            print(f"  skip page_size={ps}: does not divide "
+                  f"prompt_len/t_total", file=sys.stderr)
+            continue
+        vp = t_total // ps
+        kv_pages = max(int(args.pool_extents * vp), vp) + 1
+        reference = None                 # unwindowed outputs at this ps
+        for wb in windows:
+            gcfg = gen_cfg(bm, "es", gen_length=args.gen_length,
+                           block_length=args.block_length,
+                           window_blocks=wb)
+            point = _run_point(bm, gcfg, n_requests=args.requests,
+                               prompt_len=args.prompt_len, slots=args.slots,
+                               page_size=ps, kv_pages=kv_pages,
+                               seed=args.seed)
+            out = point.pop("outputs")
+            point["page_size"] = ps
+            if wb == 0:
+                reference = out
+                point["greedy_agreement"] = 1.0
+            else:
+                if reference is not None:
+                    point["greedy_agreement"] = float(
+                        (out == reference).mean())
+                point["bound"] = costmodel.suffix_window_report(
+                    bm.model.cfg, gcfg, pool_pages=kv_pages - 1,
+                    page_size=ps, prompt_len=args.prompt_len)
+            grid.append(point)
+            agr = point.get("greedy_agreement")
+            print(f"  ps={ps:3d} wb={wb}  goodput={point['goodput']:8.2f} "
+                  f"tok/s  resident={point['admitted_concurrency']}  "
+                  f"peak_pages={point['peak_pages_in_use']}/"
+                  f"{point['pages_total']}  "
+                  f"deferred={point['pages_deferred']}  "
+                  f"stalls={point['window_stalls']}  "
+                  f"agreement={'-' if agr is None else f'{agr:.3f}'}")
+    payload = {
+        "config": {"arch": args.arch, "requests": args.requests,
+                   "slots": args.slots, "prompt_len": args.prompt_len,
+                   "gen_length": args.gen_length,
+                   "block_length": args.block_length,
+                   "pool_extents": args.pool_extents, "seed": args.seed},
+        "grid": grid,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json} ({len(grid)} grid points)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
