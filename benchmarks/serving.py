@@ -112,6 +112,11 @@ SW_POOL_PAGES = 29              # allocatable pages: one page short of three
                                 # full extents, so eager reservation gates
                                 # at 2 resident while lazy admission (8
                                 # pages + 2-page deficit each) fits 3 (1.5x)
+PERSIST_POOL_PAGES = 6          # prefix-persist pool: a 1-block request
+                                # spans 4 pages (3 prompt + 1 private), so
+                                # unshared admission gates at 1 resident
+                                # while a warm persistent store (3 resident
+                                # prompt pages, 1 private page each) fits 3
 
 
 def _mk_requests(bm, n: int, seed: int = 0) -> list[Request]:
@@ -380,6 +385,67 @@ def _run_dup_prefix(bm, gcfg: GenerationConfig, *, sharing: bool) -> dict:
     }
 
 
+def _run_prefix_persist(bm, gcfg: GenerationConfig, *, persist: bool) -> dict:
+    """Repeated identical-prompt waves under block-causal encoding, pool
+    sized for ONE unshared request's extent plus the resident prompt.
+
+    ``persist=False`` is the baseline: no sharing, every wave re-allocates
+    and re-fills the prompt pages, and admission is page-gated to one
+    resident.  ``persist=True`` seeds the persistent store with a single
+    request in a PRIOR cycle (drained before the measured wave — nothing
+    same-cycle about the reuse), then every measured admission is a
+    cross-request store hit: zero prompt-page allocations, concurrency
+    bounded only by private pages."""
+    rng = np.random.default_rng(77)
+    vocab = bm.model.cfg.vocab_size
+    prompt = rng.integers(3, vocab, PROMPT_LEN).astype(np.int32)
+    n_prompt_vp = PROMPT_LEN // PAGE_SIZE
+    n_vp_req = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
+    kv_pages = PERSIST_POOL_PAGES + 1       # + the reserved garbage page
+    sched = StreamScheduler(bm.model, bm.params, gcfg,
+                            max_slots=DUP_REQUESTS, prompt_len=PROMPT_LEN,
+                            paged=True, page_size=PAGE_SIZE,
+                            kv_pages=kv_pages, prefix_sharing=persist)
+    # warm the compile cache AND (persist) the store: a full prior cycle
+    sched.submit(Request(prompt=prompt.copy(), max_new_tokens=BLOCK_LENGTH))
+    sched.drain()
+    al = sched.allocator
+    store_before = sorted(pg for _, m in al._prefix.values() for _, pg in m)
+    if persist and len(store_before) != n_prompt_vp:
+        raise RuntimeError(
+            f"seed cycle left {len(store_before)} resident prompt pages, "
+            f"expected {n_prompt_vp}")
+    sched.stats.__init__()
+    sched.stats.pages_total = kv_pages - 1
+    al.pages_allocated = 0
+    reqs = [Request(prompt=prompt.copy(), max_new_tokens=BLOCK_LENGTH)
+            for _ in range(DUP_REQUESTS)]
+    t0 = time.monotonic()
+    for r in reqs:
+        sched.submit(r)
+    done = sched.drain()
+    makespan = time.monotonic() - t0
+    assert len(done) == DUP_REQUESTS
+    store_after = sorted(pg for _, m in al._prefix.values() for _, pg in m)
+    priv = n_vp_req - n_prompt_vp if persist else n_vp_req
+    return {
+        "persist": persist,
+        "goodput": sched.stats.tokens_out / makespan,
+        "makespan": makespan,
+        "admitted_concurrency": sched.stats.resident_peak,
+        "pages_total": sched.stats.pages_total,
+        "peak_pages_in_use": sched.stats.peak_pages_in_use,
+        "prefix_hits": sched.stats.prefix_hits,
+        "prefix_evictions": sched.stats.prefix_evictions,
+        "hit_rate": sched.stats.prefix_hits / DUP_REQUESTS,
+        # pages alloc() handed out during the wave beyond the per-request
+        # private extent: >0 means prompt pages were re-allocated
+        "prompt_page_allocs": al.pages_allocated - DUP_REQUESTS * priv,
+        "store_pages_stable": store_after == store_before,
+        "outputs": [r.output.tolist() for r in done],
+    }
+
+
 def _measure_cycle_s(bm, gcfg: GenerationConfig) -> float:
     """Wall time of one warmed block cycle of the streaming engine."""
     sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
@@ -540,9 +606,46 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
             bm.model.cfg, pool_pages=2 * n_vp_req, page_size=PAGE_SIZE,
             req_pages=n_vp_req, shared_pages=PROMPT_LEN // PAGE_SIZE),
     }
+    # persistent cross-request prefix cache: identical-prompt waves under
+    # block-causal encoding at EQUAL pool bytes — unshared re-fill vs a
+    # store seeded by a fully drained PRIOR cycle
+    # single-block extent: the wave's requests each span 4 virtual pages
+    # (3 prompt + 1 generation), matching the PERSIST_POOL_PAGES sizing
+    pp_cfg = gen_cfg(bm, "es", gen_length=BLOCK_LENGTH,
+                     block_length=BLOCK_LENGTH, block_causal=True)
+    pp_base = _run_prefix_persist(bm, pp_cfg, persist=False)
+    pp_warm = _run_prefix_persist(bm, pp_cfg, persist=True)
+    # plain raises, not asserts: the acceptance gates must survive python -O
+    if pp_base.pop("outputs") != pp_warm.pop("outputs"):
+        raise RuntimeError("persistent prefix store changed greedy outputs "
+                           "(must be bit-identical to the unshared run)")
+    if pp_warm["hit_rate"] < 1.0:
+        raise RuntimeError(
+            f"warm wave hit rate {pp_warm['hit_rate']:.2f} < 1.0 — an "
+            "admission missed the persistent store")
+    if pp_warm["prompt_page_allocs"] != 0 or not pp_warm["store_pages_stable"]:
+        raise RuntimeError(
+            f"warm wave re-allocated prompt pages "
+            f"(allocs {pp_warm['prompt_page_allocs']}, stable "
+            f"{pp_warm['store_pages_stable']})")
+    n_vp_pp = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
+    prefix_persist = {
+        "unshared": pp_base,
+        "warm": pp_warm,
+        "outputs_bit_identical": True,
+        "hit_rate": pp_warm["hit_rate"],
+        "warm_prompt_page_allocs": pp_warm["prompt_page_allocs"],
+        "concurrency_gain": pp_warm["admitted_concurrency"]
+        / max(pp_base["admitted_concurrency"], 1),
+        "goodput_gain": pp_warm["goodput"] / max(pp_base["goodput"], 1e-9),
+        "bound": costmodel.prefix_persist_report(
+            bm.model.cfg, pool_pages=PERSIST_POOL_PAGES, page_size=PAGE_SIZE,
+            req_pages=n_vp_pp, shared_pages=PROMPT_LEN // PAGE_SIZE),
+    }
     return {"lockstep": lock, "stream": stream, "paged": paged,
             "early_advance": early_advance, "feature_cache": feature_cache,
-            "suffix_window": suffix_window, "dup_prefix": dup, "kv": kv_report,
+            "suffix_window": suffix_window, "dup_prefix": dup,
+            "prefix_persist": prefix_persist, "kv": kv_report,
             "mean_interarrival_s": mean_ia}
 
 
@@ -560,7 +663,8 @@ def _write_json(res: dict, path: str) -> None:
                    "sw_gen_length": SW_GEN_LENGTH,
                    "sw_prompt_len": SW_PROMPT_LEN,
                    "sw_window_blocks": SW_WINDOW_BLOCKS,
-                   "sw_pool_pages": SW_POOL_PAGES},
+                   "sw_pool_pages": SW_POOL_PAGES,
+                   "persist_pool_pages": PERSIST_POOL_PAGES},
         **res,
     }
     with open(path, "w") as f:
@@ -636,6 +740,19 @@ def run(rows: list) -> None:
         f"{dup['bound']['bound_gain']:.2f}x) at equal pool bytes, "
         f"outputs bit-identical",
     ))
+    pp = res["prefix_persist"]
+    rows.append((
+        "serving/prefix_persist", dt * 1e6 / 4,
+        f"concurrency={pp['unshared']['admitted_concurrency']}->"
+        f"{pp['warm']['admitted_concurrency']} "
+        f"({pp['concurrency_gain']:.2f}x, bound "
+        f"{pp['bound']['bound_gain']:.2f}x) "
+        f"goodput={pp['unshared']['goodput']:.2f}->"
+        f"{pp['warm']['goodput']:.2f}tok/s ({pp['goodput_gain']:.2f}x) "
+        f"hits={pp['warm']['prefix_hits']} hit_rate={pp['hit_rate']:.2f} "
+        f"prompt_page_allocs={pp['warm_prompt_page_allocs']} at equal pool "
+        f"bytes, outputs bit-identical",
+    ))
     _write_json(res, "BENCH_serving.json")
 
 
@@ -701,6 +818,17 @@ def main() -> None:
           f"{dup['shared']['admitted_concurrency']} "
           f"({dup['concurrency_gain']:.2f}x measured, "
           f"{dup['bound']['bound_gain']:.2f}x analytic bound), "
+          f"outputs bit-identical")
+    pp = res["prefix_persist"]
+    print(f"prefix-persist ({DUP_REQUESTS} identical requests, warm "
+          f"cross-cycle store, equal pool bytes): admitted concurrency "
+          f"{pp['unshared']['admitted_concurrency']} -> "
+          f"{pp['warm']['admitted_concurrency']} "
+          f"({pp['concurrency_gain']:.2f}x measured, "
+          f"{pp['bound']['bound_gain']:.2f}x analytic bound), goodput "
+          f"{pp['unshared']['goodput']:.2f} -> {pp['warm']['goodput']:.2f} "
+          f"tok/s ({pp['goodput_gain']:.2f}x), hit rate {pp['hit_rate']:.2f}, "
+          f"{pp['warm_prompt_page_allocs']} warm prompt-page allocations, "
           f"outputs bit-identical")
     if args.json:
         _write_json(res, args.json)

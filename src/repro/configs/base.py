@@ -214,6 +214,16 @@ class GenerationConfig:
     # the program is structurally identical to the unwindowed engine.
     window_blocks: int = 0
 
+    # block-causal attention (Discrete Diffusion Forcing, PAPERS.md): a query
+    # in generation block ``b`` attends only to the prompt and to generation
+    # blocks ``<= b`` — never ahead.  Prompt rows see only the prompt.  This
+    # makes prompt and settled earlier-block K/V *iteration-invariant*, which
+    # is the soundness condition for the persistent cross-request prefix
+    # cache (ARCHITECTURE §4) and lets FULL refreshes skip rewriting settled
+    # positions.  False compiles the mask term out entirely: the program is
+    # structurally identical to the bidirectional engine.
+    block_causal: bool = False
+
     def resolved_steps(self) -> int:
         return self.steps_per_block or self.block_length
 

@@ -101,6 +101,7 @@ from repro.core.schedule import (
     Segment,
     branch_index as resolve_branch_index,
     full_refresh_pred as resolve_full_refresh_pred,
+    invariant_limit as resolve_invariant_limit,
     prompt_refresh_pred as resolve_refresh_pred,
     resolve_segments,
     window_limit as resolve_window_limit,
@@ -332,6 +333,27 @@ class DiffusionEngine:
         gather-refresh pass (which gathers ``bs``) share one truth."""
         return resolve_window_limit(self.gen, bs)
 
+    def _bc_args(self, t_total: int) -> dict:
+        """Static block-causal mask parameters for a sequence of ``t_total``
+        positions: the generation region starts at ``t_total - gen_length``
+        (the padded prompt end — a trace-time constant for both the offline
+        block loop and the fixed-shape serving state), and blocks are
+        ``block_length`` wide.  ``bc_block == 0`` (bidirectional mode)
+        compiles the mask term out of every attention lowering."""
+        gen = self.gen
+        if not gen.block_causal:
+            return {}
+        return {"bc_start": t_total - gen.gen_length,
+                "bc_block": gen.block_length}
+
+    def _invariant_limit(self, bs, iters, t_total: int) -> Optional[jax.Array]:
+        """[B] exclusive FULL-refresh write horizon under block-causal
+        attention (``core.schedule.invariant_limit``), or None when the mode
+        is off so the refresh token mask is compiled out."""
+        gen = self.gen
+        return resolve_invariant_limit(gen, bs, iters,
+                                       t_total - gen.gen_length)
+
     def _kv_pos(self, kv_valid, prompt_start) -> jax.Array:
         """[B, T] cache-validity positions: -1 for sparse-evicted rows and
         pad prompt rows (pos < prompt_start).  Unmapped virtual pages are
@@ -392,24 +414,32 @@ class DiffusionEngine:
         if self.adaptive_cache:
             feat = jnp.zeros((b, t_total, self.cfg.d_model), jnp.float32)
             conf_full = jnp.zeros((b, t_total), jnp.float32)
+        # the KV caches carry across blocks, mirroring how EngineState
+        # threads them in serving.  Block-causal refreshes depend on it: the
+        # invariant exemption leaves positions below the settled horizon
+        # unwritten, which is only sound if the carried cache still holds
+        # their (final) K/V.  Bidirectional mode is unaffected — its
+        # block-entry prefill zeroes and rewrites every position anyway.
+        caches = self._init_caches(b, t_total)
         for blk in range(n_blocks):
             bs = jnp.full((b,), p + blk * lb, jnp.int32)
             iters0 = jnp.full((b,), blk * gen.resolved_steps(), jnp.int32)
-            tokens, kv_valid, feat, conf_full = self._jit_run_block(
-                params, tokens, kv_valid, feat, conf_full, key, bs, iters0,
-                sample_seeds, prompt_start, enc_out)
+            tokens, kv_valid, feat, conf_full, caches = self._jit_run_block(
+                params, tokens, kv_valid, feat, conf_full, caches, key, bs,
+                iters0, sample_seeds, prompt_start, enc_out)
         return tokens
 
     # ------------------------------------------------------------------
     # per-block loop
     # ------------------------------------------------------------------
-    def _run_block(self, params, tokens, kv_valid0, feat0, conf_full0, key,
-                   bs, iters0, seeds, prompt_start, enc_out):
+    def _run_block(self, params, tokens, kv_valid0, feat0, conf_full0,
+                   caches0, key, bs, iters0, seeds, prompt_start, enc_out):
         gen = self.gen
         b, t_total = tokens.shape
         bs = self._bs_rows(bs, b)
         state = self.make_block_state(tokens, key)._replace(
-            kv_valid=kv_valid0, feat=feat0, conf_full=conf_full0)
+            kv_valid=kv_valid0, feat=feat0, conf_full=conf_full0,
+            caches=caches0)
         block_tables = self._identity_block_tables(b, t_total) if self.paged else None
         max_steps = gen.resolved_steps() + 1
 
@@ -425,7 +455,8 @@ class DiffusionEngine:
             return self._apply_unmask(st, bs, *outs)
 
         state = jax.lax.while_loop(cond, body, state)
-        return state.tokens, state.kv_valid, state.feat, state.conf_full
+        return (state.tokens, state.kv_valid, state.feat, state.conf_full,
+                state.caches)
 
     def _apply_unmask(self, st: BlockState, bs, caches, conf, pred, hidden,
                       kv_valid, feat=None, stats=None,
@@ -455,9 +486,11 @@ class DiffusionEngine:
     # ------------------------------------------------------------------
     # standalone steps (serving runtime & multi-pod dry-run)
     # ------------------------------------------------------------------
-    def make_block_state(self, tokens: jax.Array, key: jax.Array) -> BlockState:
-        b, t_total = tokens.shape
-        lb = self.gen.block_length
+    def _init_caches(self, b: int, t_total: int):
+        """Fresh zeroed model caches for a ``[b, t_total]`` layout (shared
+        by ``make_block_state`` and the offline loop's carried-cache init)."""
+        if self.gen.mode == "vanilla":
+            return ()
         kv_pages = 0
         if self.paged:
             assert t_total % self.page_size == 0, (
@@ -465,9 +498,14 @@ class DiffusionEngine:
             # default pool: dense-equivalent (+ the reserved garbage page 0);
             # the serving scheduler passes a smaller kv_pages to oversubscribe
             kv_pages = self.kv_pages or b * (t_total // self.page_size) + 1
-        caches = () if self.gen.mode == "vanilla" else self.model.init_cache(
-            b, t_total, lb, kv_dtype=self.kv_cache_dtype,
+        return self.model.init_cache(
+            b, t_total, self.gen.block_length, kv_dtype=self.kv_cache_dtype,
             kv_pages=kv_pages, page_size=self.page_size)
+
+    def make_block_state(self, tokens: jax.Array, key: jax.Array) -> BlockState:
+        b, t_total = tokens.shape
+        lb = self.gen.block_length
+        caches = self._init_caches(b, t_total)
         feat = conf_full = None
         if self.adaptive_cache:
             feat = jnp.zeros((b, t_total, self.cfg.d_model), jnp.float32)
@@ -901,12 +939,21 @@ class DiffusionEngine:
 
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
+        # block-causal: positions below the invariant horizon already hold
+        # their final K/V (a rewrite would be a value no-op), so the refresh
+        # scatter exempts them — which is what keeps persistently shared
+        # prompt pages read-only across requests.  None (bidirectional mode)
+        # compiles the token mask out.
+        inv = self._invariant_limit(bs, iters, t_total)
+        refresh_tok = None if inv is None else (col >= inv[:, None])
         caches = st.caches
-        if row_mask is None:
+        if row_mask is None and inv is None:
             # phase-aligned path: every row rebuilds in this same pass, so
             # zeroing the whole cache (pool included) is correct; under a
             # row mask the other rows' cache state must survive, and the
-            # refresh scatter rewrites every owned position regardless
+            # refresh scatter rewrites every owned position regardless.
+            # Under the block-causal exemption the invariant positions'
+            # cached K/V must survive too, so zeroing is skipped there.
             caches = jax.tree_util.tree_map(jnp.zeros_like, caches)
         if self.cache_shardings is not None:
             caches = jax.tree_util.tree_map(
@@ -917,7 +964,8 @@ class DiffusionEngine:
             "prefill", pos, kv_pos=kv_pos, slot_idx=pos,
             block_start=bs, enc_out=enc_out,
             block_tables=block_tables, page_size=self.page_size,
-            scatter_mask=row_mask, window_limit=self._window_limit(bs),
+            scatter_mask=row_mask, refresh_mask=refresh_tok,
+            window_limit=self._window_limit(bs), **self._bc_args(t_total),
         )
         hidden = []
         feat = st.feat
@@ -982,6 +1030,7 @@ class DiffusionEngine:
                 slot_idx=bs[:, None] + s_idx, block_idx=s_idx,
                 block_tables=block_tables, page_size=self.page_size,
                 scatter_mask=row_mask, window_limit=wl,
+                **self._bc_args(t_total),
             )
             out = model.run_layers(params, h, ctx, caches,
                                    group_lo=seg.group_lo, group_hi=seg.group_hi)
@@ -1024,6 +1073,13 @@ class DiffusionEngine:
         t_total = st.tokens.shape[1]
         col = jnp.arange(t_total, dtype=jnp.int32)[None]
         eligible = st.kv_valid & ~in_block & (col >= prompt_start[:, None])
+        if self.gen.block_causal:
+            # a partial refresh only ever runs after the block-entry FULL
+            # refresh wrote everything below bs with final tokens, and under
+            # block-causal masking those K/V are iteration-invariant —
+            # recomputing them buys nothing, and writing them would touch
+            # persistently shared prompt pages
+            eligible &= col >= bs[:, None]
         wl = self._window_limit(bs)
         if wl is not None:
             # beyond-window positions are masked from every attention read,
@@ -1074,6 +1130,7 @@ class DiffusionEngine:
             block_start=bs, enc_out=enc_out,
             block_tables=block_tables, page_size=self.page_size,
             scatter_mask=row_mask, window_limit=wl,
+            **self._bc_args(t_total),
         )
         out = model.run_layers(params, h, ctx, st.caches,
                                group_lo=0, group_hi=gp)
@@ -1104,6 +1161,7 @@ class DiffusionEngine:
             "decode", sel, kv_pos=kv_pos, slot_idx=sel,
             block_tables=block_tables, page_size=self.page_size,
             scatter_mask=row_mask, refresh_mask=tok_ok, window_limit=wl,
+            **self._bc_args(t_total),
         )
         out = model.run_layers(params, h_sel, dctx, caches,
                                group_lo=gp, group_hi=model.n_groups)
@@ -1180,7 +1238,8 @@ class DiffusionEngine:
             seeds = jnp.arange(b, dtype=jnp.int32)
         h = model.embed(params, st.tokens)
         pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None], (b, t_total))
-        ctx = self._ctx("nocache", pos, enc_out=enc_out)
+        ctx = self._ctx("nocache", pos, enc_out=enc_out,
+                        **self._bc_args(t_total))
         out = model.run_layers(params, h, ctx, None)
         logits_blk = model.logits(params, _row_gather(out.h, self._block_cols(bs)))
         conf, pred = self._confidence(st, bs, logits_blk, iters, seeds)

@@ -100,6 +100,35 @@ def window_limit(gen: GenerationConfig, bs):
     return bs + gen.block_length * (1 + gen.window_blocks)
 
 
+def invariant_limit(gen: GenerationConfig, bs, iters, gen_start):
+    """Per-row exclusive FULL-refresh *write* horizon under block-causal
+    attention: positions ``< limit`` hold iteration-invariant K/V that a
+    refresh may leave in place (the rewrite would be a value no-op).
+
+    Under block-causal masking a position's K/V depends only on tokens at
+    or before its own block; the prompt (block -1) is invariant from the
+    first prefill, and a settled generation block becomes invariant once a
+    refresh has written it with its final tokens — which the block-entry
+    FULL refresh of the NEXT block always does.  So at any refresh with
+    current block start ``bs``, everything below ``max(bs - block_length,
+    gen_start)`` was already final-written by an earlier refresh and is
+    exempt; the just-settled block ``[bs - block_length, bs)`` still needs
+    its final write, and a row's very first prefill (``iters == 0``) must
+    write everything.  Returns ``None`` when ``block_causal`` is disabled so
+    every caller compiles the exemption out (the program is structurally
+    identical to the always-rewrite engine).  Elementwise like
+    :func:`prompt_refresh_pred`: ``bs``/``iters`` may be python ints, numpy
+    arrays, or traced ``[B]`` jax arrays — the engine's refresh token mask
+    and the scheduler's ``invariant_tokens_skipped`` gauge both derive from
+    this one function and cannot drift apart."""
+    if not gen.block_causal:
+        return None
+    import jax.numpy as jnp
+
+    settled = jnp.maximum(bs - gen.block_length, gen_start)
+    return jnp.where(iters > 0, settled, 0)
+
+
 @dataclasses.dataclass(frozen=True)
 class Segment:
     group_lo: int

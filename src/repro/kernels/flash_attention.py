@@ -87,6 +87,8 @@ def _flash_kernel(
     window: int,
     anchor: int,
     causal: bool,
+    bc_start: int,
+    bc_block: int,
     n_kv_blocks: int,
 ):
     ki = pl.program_id(3)
@@ -115,6 +117,13 @@ def _flash_kernel(
         if anchor > 0:
             win |= kp < anchor
         mask &= win
+    if bc_block > 0:
+        # block-causal: prompt rows (pos < bc_start) are block -1, generation
+        # position p is block (p - bc_start) // bc_block; a query attends
+        # only its own and earlier blocks.  bc_block == 0 compiles this out.
+        qb = jnp.where(qp >= bc_start, (qp - bc_start) // bc_block, -1)
+        kb = jnp.where(kp >= bc_start, (kp - bc_start) // bc_block, -1)
+        mask &= kb <= qb
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]                           # [bq, 1]
@@ -144,6 +153,8 @@ def flash_attention_kernel(
     window: int = 0,
     anchor: int = 0,
     causal: bool = False,
+    bc_start: int = 0,
+    bc_block: int = 0,
     softmax_scale: float,
     block_q: int = 128,
     block_kv: int = 512,
@@ -164,6 +175,8 @@ def flash_attention_kernel(
         window=window,
         anchor=anchor,
         causal=causal,
+        bc_start=bc_start,
+        bc_block=bc_block,
         n_kv_blocks=n_kv_blocks,
     )
 
@@ -203,6 +216,8 @@ def paged_flash_attention_kernel(
     window: int = 0,
     anchor: int = 0,
     causal: bool = False,
+    bc_start: int = 0,
+    bc_block: int = 0,
     softmax_scale: float,
     block_q: int = 128,
     interpret: bool = False,
@@ -225,6 +240,8 @@ def paged_flash_attention_kernel(
         window=window,
         anchor=anchor,
         causal=causal,
+        bc_start=bc_start,
+        bc_block=bc_block,
         n_kv_blocks=n_vpages,
     )
 

@@ -80,6 +80,8 @@ def attention(
     window=0,            # static int, or traced scalar (per-layer local:global)
     anchor: int = 0,
     causal: bool = False,
+    bc_start: int = 0,   # block-causal: first generation position (static)
+    bc_block: int = 0,   # block-causal block length; 0 compiles the mask out
     softmax_scale: float | None = None,
     impl: Impl = "xla",
     block_q: int = 128,
@@ -102,7 +104,8 @@ def attention(
         assert k_scale is None, "int8 KV dequant: XLA path only (for now)"
         return _attention_pallas(
             q, k, v, q_pos, kv_pos,
-            window=window, anchor=anchor, causal=causal, scale=scale,
+            window=window, anchor=anchor, causal=causal,
+            bc_start=bc_start, bc_block=bc_block, scale=scale,
             block_q=block_q, block_kv=block_kv,
             interpret=_on_cpu() if interpret is None else interpret,
         )
@@ -117,7 +120,8 @@ def attention(
             qc, qpc = args
             return _attention_xla_chunked(
                 qc, k, v, qpc, kv_pos,
-                window=window, anchor=anchor, causal=causal, scale=scale,
+                window=window, anchor=anchor, causal=causal,
+                bc_start=bc_start, bc_block=bc_block, scale=scale,
                 kv_chunk=kv_chunk, k_scale=k_scale, v_scale=v_scale,
             )
 
@@ -127,13 +131,14 @@ def attention(
         return jnp.moveaxis(out, 0, 2).reshape(q.shape)
     return _attention_xla_chunked(
         q, k, v, q_pos, kv_pos,
-        window=window, anchor=anchor, causal=causal, scale=scale,
+        window=window, anchor=anchor, causal=causal,
+        bc_start=bc_start, bc_block=bc_block, scale=scale,
         kv_chunk=kv_chunk, k_scale=k_scale, v_scale=v_scale,
     )
 
 
-def _attention_pallas(q, k, v, q_pos, kv_pos, *, window, anchor, causal, scale,
-                      block_q, block_kv, interpret):
+def _attention_pallas(q, k, v, q_pos, kv_pos, *, window, anchor, causal,
+                      bc_start, bc_block, scale, block_q, block_kv, interpret):
     b, hq, lq, d = q.shape
     lkv = k.shape[2]
     bq = min(block_q, _round_up(lq, 8))
@@ -150,14 +155,16 @@ def _attention_pallas(q, k, v, q_pos, kv_pos, *, window, anchor, causal, scale,
 
     out = flash_attention_kernel(
         qp, kp, vp, qpos_p.astype(jnp.int32), kvpos_p.astype(jnp.int32),
-        window=window, anchor=anchor, causal=causal, softmax_scale=scale,
+        window=window, anchor=anchor, causal=causal,
+        bc_start=bc_start, bc_block=bc_block, softmax_scale=scale,
         block_q=bq, block_kv=bkv, interpret=interpret,
     )
     return out[:, :, :lq, :d]
 
 
 def _attention_xla_chunked(q, k, v, q_pos, kv_pos, *, window, anchor, causal,
-                           scale, kv_chunk, k_scale=None, v_scale=None):
+                           scale, kv_chunk, bc_start=0, bc_block=0,
+                           k_scale=None, v_scale=None):
     """Online-softmax attention scanning KV in chunks (flash math in jnp).
 
     Never materializes the [Lq, Lkv] score matrix, so prefill at 32k/500k
@@ -212,6 +219,13 @@ def _attention_xla_chunked(q, k, v, q_pos, kv_pos, *, window, anchor, causal,
             if anchor > 0:
                 win |= kp_ < anchor
             mask &= win
+        if bc_block > 0:
+            # block-causal (same term as the Pallas kernel): prompt rows are
+            # block -1, generation position p is block (p - bc_start) //
+            # bc_block; queries attend own + earlier blocks only
+            qb = jnp.where(qp >= bc_start, (qp - bc_start) // bc_block, -1)
+            kb = jnp.where(kp_ >= bc_start, (kp_ - bc_start) // bc_block, -1)
+            mask &= kb <= qb
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
@@ -285,6 +299,8 @@ def paged_attention(
     window=0,
     anchor: int = 0,
     causal: bool = False,
+    bc_start: int = 0,
+    bc_block: int = 0,
     softmax_scale: float | None = None,
     impl: Impl = "xla",
     block_q: int = 128,
@@ -312,7 +328,8 @@ def paged_attention(
         assert k_scale is None, "int8 KV dequant: XLA path only (for now)"
         return _paged_attention_pallas(
             q, k_pool, v_pool, q_pos, kv_pos, block_tables,
-            window=window, anchor=anchor, causal=causal, scale=scale,
+            window=window, anchor=anchor, causal=causal,
+            bc_start=bc_start, bc_block=bc_block, scale=scale,
             block_q=block_q,
             interpret=_on_cpu() if interpret is None else interpret,
         )
@@ -330,13 +347,15 @@ def paged_attention(
         v_d = v_d.astype(q.dtype)
     return _attention_xla_chunked(
         q, k_d, v_d, q_pos, kv_pos,
-        window=window, anchor=anchor, causal=causal, scale=scale,
+        window=window, anchor=anchor, causal=causal,
+        bc_start=bc_start, bc_block=bc_block, scale=scale,
         kv_chunk=kv_chunk, k_scale=ks, v_scale=vs,
     )
 
 
 def _paged_attention_pallas(q, k_pool, v_pool, q_pos, kv_pos, block_tables, *,
-                            window, anchor, causal, scale, block_q, interpret):
+                            window, anchor, causal, bc_start, bc_block, scale,
+                            block_q, interpret):
     b, hq, lq, d = q.shape
     ps = k_pool.shape[1]
     assert ps % 8 == 0, "page_size must be a multiple of 8 for the TPU kernel"
@@ -355,7 +374,8 @@ def _paged_attention_pallas(q, k_pool, v_pool, q_pos, kv_pos, block_tables, *,
         qp, kp.astype(qp.dtype), vp.astype(qp.dtype),
         qpos_p.astype(jnp.int32), kv_pos.astype(jnp.int32),
         block_tables.astype(jnp.int32),
-        window=window, anchor=anchor, causal=causal, softmax_scale=scale,
+        window=window, anchor=anchor, causal=causal,
+        bc_start=bc_start, bc_block=bc_block, softmax_scale=scale,
         block_q=bq, interpret=interpret,
     )
     return out[:, :, :lq, :d]

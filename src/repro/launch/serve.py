@@ -90,6 +90,12 @@ def main() -> None:
                          "prompt + one active window, the rest grows "
                          "just-in-time as the window slides (requires "
                          "--paged and --window-blocks > 0)")
+    ap.add_argument("--block-causal", action="store_true",
+                    help="causal-block attention mask: prompt K/V becomes a "
+                         "pure function of the prompt, enabling the "
+                         "persistent cross-request prefix store (with "
+                         "--paged --prefix-sharing) and invariant-position "
+                         "refresh skipping (docs/ARCHITECTURE.md §4b/4c)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -109,6 +115,7 @@ def main() -> None:
         cache_prompt_interval=args.cache_prompt_interval,
         cache_variation_threshold=args.cache_variation_threshold,
         window_blocks=args.window_blocks,
+        block_causal=args.block_causal,
     )
 
     stream_cb = None
@@ -159,6 +166,9 @@ def main() -> None:
                      f"  concurrency_peak={server.stats.resident_peak}")
             if args.prefix_sharing:
                 line += f"  cow_forks={server.stats.cow_forks}"
+            if server.persistent_prefix:
+                line += (f"  prefix_hits={server.stats.prefix_hits}"
+                         f"  prefix_evictions={server.stats.prefix_evictions}")
             if gen.sparse_attention:
                 line += f"  pages_reclaimed={server.stats.pages_reclaimed}"
             if args.lazy_reserve:

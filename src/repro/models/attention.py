@@ -122,6 +122,8 @@ def self_attention(
     causal: bool = False,
     window=0,                      # int or traced scalar (per-layer local attn)
     anchor: int = 0,
+    bc_start: int = 0,             # block-causal: first generation position
+    bc_block: int = 0,             # block-causal block length; 0 = off
     attn_impl: str = "xla",
     use_rope: bool = True,
     scatter_mask: Optional[jax.Array] = None,   # [B] rows whose scatters land
@@ -155,7 +157,8 @@ def self_attention(
         assert slot_idx is not None and kv_pos is not None
         return _paged_self_attention(
             params, q, kk, vv, cache, positions, slot_idx, kv_pos,
-            causal=causal, window=window, anchor=anchor, attn_impl=attn_impl,
+            causal=causal, window=window, anchor=anchor,
+            bc_start=bc_start, bc_block=bc_block, attn_impl=attn_impl,
             scatter_mask=scatter_mask, token_mask=token_mask,
             window_limit=window_limit,
         )
@@ -199,6 +202,8 @@ def self_attention(
         causal=causal,
         window=window,
         anchor=anchor,
+        bc_start=bc_start,
+        bc_block=bc_block,
         impl=attn_impl,
         k_scale=None if k_scale is None else jnp.swapaxes(k_scale, 1, 2),
         v_scale=None if v_scale is None else jnp.swapaxes(v_scale, 1, 2),
@@ -209,8 +214,8 @@ def self_attention(
 
 def _paged_self_attention(
     params, q, kk, vv, cache: PagedKVCache, positions, slot_idx, kv_pos,
-    *, causal, window, anchor, attn_impl, scatter_mask=None, token_mask=None,
-    window_limit=None,
+    *, causal, window, anchor, bc_start=0, bc_block=0, attn_impl,
+    scatter_mask=None, token_mask=None, window_limit=None,
 ) -> tuple[jax.Array, PagedKVCache]:
     """Scatter fresh rows through the block table, attend the page pool.
 
@@ -259,6 +264,7 @@ def _paged_self_attention(
         positions, kv_pos, read_bt,
         page_size=ps,
         causal=causal, window=window, anchor=anchor,
+        bc_start=bc_start, bc_block=bc_block,
         impl=attn_impl,
         k_scale=k_scale, v_scale=v_scale,
     )

@@ -86,6 +86,10 @@ class ForwardCtx:
     causal: bool = False
     window_override: int = 0                  # long-context windowed variant
     anchor: int = 0
+    bc_start: int = 0                         # block-causal: first generation
+                                              # position (static int)
+    bc_block: int = 0                         # block-causal block length;
+                                              # 0 compiles the mask out
     attn_impl: str = "xla"
     act_sharding: Any = None                  # NamedSharding for h between groups
                                               # (Megatron sequence parallelism)
@@ -407,6 +411,7 @@ class Model:
                 cache=kv_cache,
                 slot_idx=ctx.slot_idx, kv_pos=ctx.kv_pos,
                 causal=ctx.causal, window=window, anchor=ctx.anchor,
+                bc_start=ctx.bc_start, bc_block=ctx.bc_block,
                 attn_impl=ctx.attn_impl, scatter_mask=ctx.scatter_mask,
                 token_mask=ctx.refresh_mask, window_limit=ctx.window_limit,
             )

@@ -68,6 +68,7 @@ import numpy as np
 
 from repro.configs.base import GenerationConfig
 from repro.core.engine import DiffusionEngine
+from repro.core.schedule import full_refresh_pred, invariant_limit
 from repro.models.model import Model
 from repro.runtime.request import Request, StreamCallback
 
@@ -108,6 +109,16 @@ class SchedulerStats:
     cache_eligible_total: int = 0        # past-token K/V rows a refresh saw
     refresh_event_tokens: list = dataclasses.field(default_factory=list)
                                          # tokens refreshed per refresh event
+    # persistent cross-request prefix cache (block-causal mode only; all 0
+    # otherwise).  A *hit* admits a request whose full prompt pages were
+    # already resident — zero prompt-page allocations; an *eviction* drops
+    # an LRU store entry under pool pressure (its pages free only once the
+    # last slot claim dies).  invariant_tokens_skipped counts positions a
+    # FULL refresh left in place because block-causal masking makes their
+    # K/V iteration-invariant (core.schedule.invariant_limit).
+    prefix_hits: int = 0                 # admissions served from the store
+    prefix_evictions: int = 0            # LRU store entries dropped
+    invariant_tokens_skipped: int = 0    # refresh rewrites skipped as invariant
 
     @property
     def goodput(self) -> float:
@@ -150,6 +161,9 @@ class SchedulerStats:
             "admission_wait_p50": self.admission_wait_p50,
             "cache_hit_fraction": self.cache_hit_fraction,
             "tokens_refreshed_p50": self.tokens_refreshed_p50,
+            "prefix_hits": self.prefix_hits,
+            "prefix_evictions": self.prefix_evictions,
+            "invariant_tokens_skipped": self.invariant_tokens_skipped,
         }
 
     # BatchServer.stats compatibility
@@ -193,14 +207,33 @@ class PageAllocator:
     bidirectional dLLM attention makes prompt K/V depend on the whole
     sequence state: pages written by slots admitted in different cycles are
     never content-equal (docs/ARCHITECTURE.md, sharing contract).
+
+    **Persistent mode** (``persistent=True``, block-causal attention only):
+    the index becomes a cross-request prefix STORE.  ``register_prefix``
+    takes one store-owned ``share`` claim per page, so registered prompt
+    pages stay resident — content intact — after every slot claim dies;
+    ``lookup_prefix`` is an LRU touch; and ``alloc`` under pool pressure
+    evicts least-recently-used store entries (dropping only the store's
+    claims — an entry whose pages are still mapped by live slots frees
+    nothing until those slots retire) before reporting the pool full.  The
+    scheduler never cycle-clears a persistent index: block-causal prompt
+    K/V depend only on the prompt bytes, so residency is sound across
+    admission cycles and requests (docs/ARCHITECTURE.md §4).
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, persistent: bool = False):
         assert num_pages >= 2, "pool needs the garbage page + >=1 real page"
         self.num_pages = num_pages
+        self.persistent = persistent
         self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low ids first
         self._refcount = [0] * num_pages
-        self._prefix: dict = {}          # content key -> admission-cycle payload
+        # content key -> payload.  Same-cycle mode: opaque admission payload,
+        # cleared every cycle.  Persistent mode: (slot, [(vp, page)]) whose
+        # pages the store holds claims on; dict order is the LRU order
+        # (lookup reinserts, eviction pops from the front).
+        self._prefix: dict = {}
+        self.prefix_evictions = 0        # LRU store entries evicted (persistent)
+        self.pages_allocated = 0         # lifetime pages handed out by alloc()
 
     @property
     def free_pages(self) -> int:
@@ -215,15 +248,45 @@ class PageAllocator:
         """Extra claims created by sharing (sum of refcount-1 over pages)."""
         return sum(rc - 1 for rc in self._refcount if rc > 1)
 
+    @property
+    def reclaimable_pages(self) -> int:
+        """Pages an LRU eviction sweep could free RIGHT NOW: store-claimed
+        pages with no other live claim.  Admission and window-growth gates
+        must count these next to ``free_pages`` — a persistent store is a
+        cache, not a reservation, and treating its idle pages as unavailable
+        deadlocks a tight pool (the gate never passes, eviction never runs)."""
+        if not self.persistent:
+            return 0
+        return sum(1 for _, page_map in self._prefix.values()
+                   for _, pg in page_map if self._refcount[pg] == 1)
+
     def refcount(self, page: int) -> int:
         return self._refcount[page]
 
     def alloc(self, n: int) -> Optional[list[int]]:
+        if n > len(self._free) and self.persistent:
+            # pool pressure: evict LRU store entries until the request fits
+            # or no evictable entry remains.  Dropping an entry releases the
+            # STORE's claims only, so an entry whose every page is still
+            # mapped by a live slot would free nothing — it is hot by
+            # definition and is skipped, not churned (evicting it could
+            # never satisfy THIS alloc, and would force the next admission
+            # of the same prompt to re-allocate the whole prefix).
+            for key in list(self._prefix):
+                if n <= len(self._free):
+                    break
+                _, page_map = self._prefix[key]
+                if all(self._refcount[pg] > 1 for _, pg in page_map):
+                    continue
+                del self._prefix[key]
+                self.release([pg for _, pg in page_map])
+                self.prefix_evictions += 1
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refcount[p] = 1
+        self.pages_allocated += n
         return pages
 
     def share(self, pages: list[int]) -> None:
@@ -246,14 +309,32 @@ class PageAllocator:
                 freed += 1
         return freed
 
-    # -- prefix page hash (valid within ONE admission cycle) ---------------
+    # -- prefix page hash ---------------------------------------------------
+    # Same-cycle mode: valid within ONE admission cycle (scheduler clears).
+    # Persistent mode: a cross-request store with LRU residency (see class
+    # docstring); payload must be (slot, [(vp, page)]).
     def register_prefix(self, key, payload) -> None:
+        if self.persistent:
+            assert key not in self._prefix, "re-registering a resident prefix"
+            _, page_map = payload
+            self.share([pg for _, pg in page_map])   # the store's own claims
         self._prefix[key] = payload
 
     def lookup_prefix(self, key):
-        return self._prefix.get(key)
+        hit = self._prefix.get(key)
+        if hit is not None and self.persistent:
+            # LRU touch: reinsertion moves the key to the back of the
+            # eviction order
+            self._prefix.pop(key)
+            self._prefix[key] = hit
+        return hit
 
     def clear_prefix_index(self) -> None:
+        if self.persistent:
+            # full flush (not part of the serving loop in persistent mode):
+            # drop every store claim so the pages can actually free
+            for _, page_map in self._prefix.values():
+                self.release([pg for _, pg in page_map])
         self._prefix.clear()
 
 
@@ -303,12 +384,20 @@ class StreamScheduler:
         assert not (lazy_reserve and not gen.windowed), \
             "lazy_reserve needs a finite window (window_blocks > 0): unmapped " \
             "far-suffix pages are sound only when the window masks them"
-        assert not (lazy_reserve and prefix_sharing), \
-            "lazy_reserve's deficit accounting counts private pages only — " \
-            "combine with prefix_sharing is unsupported (see ARCHITECTURE §1c)"
+        # lazy_reserve composes with prefix_sharing: deficit accounting is
+        # private-pages-only, and shared prompt vpages always sit inside the
+        # initially-mapped extent, so admission subtracts them from the
+        # up-front need while growth deficits (all-private far suffix) are
+        # untouched (ARCHITECTURE §1c).
         self.lazy_reserve = lazy_reserve
         self.early_advance = early_advance
         engine_kw.setdefault("early_advance", early_advance)
+        # persistent cross-request prefix cache: sound exactly when the mask
+        # is block-causal (prompt K/V depend only on prompt bytes), so it
+        # auto-enables with the flag pair and silently stays off otherwise —
+        # bidirectional sharing keeps its same-cycle-only contract.
+        self.persistent_prefix = bool(
+            prefix_sharing and paged and gen.block_causal)
         t_total = prompt_len + gen.gen_length
         self.allocator: Optional[PageAllocator] = None
         if paged:
@@ -320,7 +409,8 @@ class StreamScheduler:
             assert kv_pages > n_vp, (
                 "pool too small: a full-length request could never be admitted")
             engine_kw.update(paged=True, page_size=page_size, kv_pages=kv_pages)
-            self.allocator = PageAllocator(kv_pages)
+            self.allocator = PageAllocator(
+                kv_pages, persistent=self.persistent_prefix)
         self.engine = DiffusionEngine(model, gen, **engine_kw)
         self.n_blocks = gen.gen_length // gen.block_length
         self.state = self.engine.init_engine_state(
@@ -462,39 +552,74 @@ class StreamScheduler:
                 vp1 = self.prompt_len // self.page_size
                 if (self.prefix_sharing and not self.expects_enc
                         and vp1 > vp0):
-                    share_key = (p.tobytes(), len(p), n_blocks)
+                    # persistent (block-causal) keys drop n_blocks: prompt
+                    # K/V depend only on the prompt bytes, so requests with
+                    # different generation budgets share the same pages
+                    share_key = (p.tobytes(), len(p)) if \
+                        self.persistent_prefix else (p.tobytes(), len(p),
+                                                     n_blocks)
                     share_hit = self.allocator.lookup_prefix(share_key)
+                if self.lazy_reserve:
+                    # map prompt + the first active-window's worth of
+                    # blocks only; the rest is a recorded DEFICIT the
+                    # window grows into just-in-time.  No-deadlock gate:
+                    # after this admission the free list must still cover
+                    # the largest single deficit (this request's, or any
+                    # resident row's) so the oldest row can always finish
+                    # growing — the liveness invariant of ARCHITECTURE
+                    # §1c.  A failed gate waits FIFO, like page-gating.
+                    # Deficits are private-pages-only by construction:
+                    # shared prompt vpages sit inside the initial extent,
+                    # so sharing only ever shrinks the up-front need.
+                    init_blocks = min(1 + self.gen.window_blocks, n_blocks)
+                    init_last = -(-(self.prompt_len + init_blocks * lb)
+                                  // self.page_size)
+                    deficit_new = last_vp - init_last
+                    map_last = init_last
+                    need = init_last - first_vp
                 if share_hit is not None:
                     owner_slot, owner_map = share_hit
                     shared_map = list(owner_map)
-                    n_res = len(shared_map) if sampled else 0
-                    got = self.allocator.alloc(need - len(shared_map) + n_res)
-                    if got is None:
-                        break                   # page-gated: retry next cycle
-                    pages = got[: need - len(shared_map)]
-                    reserve = got[need - len(shared_map):]
+                    # CoW reserves protect sampled cohorts from diverged
+                    # prompt rewrites — a bidirectional-mode hazard only.
+                    # Block-causal prompt K/V are trajectory-independent,
+                    # so persistent hits reserve nothing.
+                    n_res = len(shared_map) if (
+                        sampled and not self.persistent_prefix) else 0
+                    n_priv = need - len(shared_map)
+                    # claim the shared pages BEFORE alloc: under pool
+                    # pressure alloc may evict this very store entry, and
+                    # these claims keep the pages resident through it
                     self.allocator.share([pg for _, pg in shared_map])
-                else:
                     if self.lazy_reserve:
-                        # map prompt + the first active-window's worth of
-                        # blocks only; the rest is a recorded DEFICIT the
-                        # window grows into just-in-time.  No-deadlock gate:
-                        # after this admission the free list must still cover
-                        # the largest single deficit (this request's, or any
-                        # resident row's) so the oldest row can always finish
-                        # growing — the liveness invariant of ARCHITECTURE
-                        # §1c.  A failed gate waits FIFO, like page-gating.
-                        init_blocks = min(1 + self.gen.window_blocks, n_blocks)
-                        init_last = -(-(self.prompt_len + init_blocks * lb)
-                                      // self.page_size)
-                        deficit_new = last_vp - init_last
-                        map_last = init_last
-                        need = init_last - first_vp
                         resident_deficit = max(
                             (self.slot_extent[s][1] - self.slot_frontier[s]
                              for s, r in enumerate(self.slot_req)
                              if r is not None), default=0)
-                        if self.allocator.free_pages - need < max(
+                        avail = (self.allocator.free_pages
+                                 + self.allocator.reclaimable_pages)
+                        if avail - (n_priv + n_res) < \
+                                max(deficit_new, resident_deficit):
+                            self.allocator.release(
+                                [pg for _, pg in shared_map])
+                            break               # reserve-gated: retry later
+                    got = self.allocator.alloc(n_priv + n_res)
+                    if got is None:
+                        self.allocator.release([pg for _, pg in shared_map])
+                        break                   # page-gated: retry next cycle
+                    pages = got[:n_priv]
+                    reserve = got[n_priv:]
+                    if self.persistent_prefix:
+                        self.stats.prefix_hits += 1
+                else:
+                    if self.lazy_reserve:
+                        resident_deficit = max(
+                            (self.slot_extent[s][1] - self.slot_frontier[s]
+                             for s, r in enumerate(self.slot_req)
+                             if r is not None), default=0)
+                        avail = (self.allocator.free_pages
+                                 + self.allocator.reclaimable_pages)
+                        if avail - need < max(
                                 deficit_new, resident_deficit):
                             break               # reserve-gated: retry later
                     got = self.allocator.alloc(need)
@@ -547,7 +672,9 @@ class StreamScheduler:
                 # live in the cohort until consumed by a fork or retirement
                 self.slot_pages[slot] = pages + [pg for _, pg in shared_map]
                 if share_key is not None:
-                    if share_hit is not None:
+                    if share_hit is not None and not self.persistent_prefix:
+                        # bidirectional sharing: hits join a CoW cohort so a
+                        # sampled divergence can fork before any refresh
                         cohort = cycle_cohorts.get(share_key)
                         if cohort is None:
                             cohort = {"owner": owner_slot,
@@ -559,7 +686,9 @@ class StreamScheduler:
                         cohort["slots"][slot] = list(shared_map)
                         if reserve:
                             cohort["reserve"][slot] = reserve
-                    else:
+                    elif share_hit is None:
+                        # persistent mode: registration hands the STORE its
+                        # own claims, so the pages outlive this slot
                         my_map = [(vp, int(bt_row[vp]))
                                   for vp in range(vp0, vp1)]
                         self.allocator.register_prefix(share_key, (slot, my_map))
@@ -583,10 +712,15 @@ class StreamScheduler:
             self.slot_streamed[slot] = 0
         self.state = st
         if self.allocator is not None:
-            # cross-cycle sharing is unsound (bidirectional attention):
-            # the prefix index only ever describes THIS cycle's admissions
-            self.allocator.clear_prefix_index()
+            if not self.persistent_prefix:
+                # cross-cycle sharing is unsound under bidirectional
+                # attention: the prefix index only ever describes THIS
+                # cycle's admissions.  Block-causal mode keeps the store —
+                # prompt K/V depend on prompt bytes alone, so residency
+                # stays sound across cycles and requests.
+                self.allocator.clear_prefix_index()
             self.stats.shared_mappings = self.allocator.shared_mappings
+            self.stats.prefix_evictions = self.allocator.prefix_evictions
         self.stats.resident_peak = max(
             self.stats.resident_peak,
             sum(r is not None for r in self.slot_req))
@@ -627,6 +761,19 @@ class StreamScheduler:
             refresh_rows &= ~stalled_mask
         if self.paged and refresh_rows.any():
             self._cow_fork_before_refresh(refresh_rows)
+        if self.gen.block_causal and refresh_rows.any():
+            # gauge: positions the upcoming FULL refreshes will leave in
+            # place (same elementwise horizon the engine's refresh token
+            # mask uses, so the two can never drift apart)
+            bs_h = np.asarray(self.state.bs)
+            it_h = np.asarray(self.state.iters)
+            full_r = np.asarray(full_refresh_pred(self.gen, it_h), bool)
+            inv = np.asarray(invariant_limit(
+                self.gen, bs_h, it_h, self.prompt_len))
+            skipped = np.maximum(
+                inv - np.asarray(self.state.prompt_start), 0)
+            self.stats.invariant_tokens_skipped += int(
+                skipped[refresh_rows & full_r].sum())
         pre_blocks_left = np.asarray(self.state.blocks_left)
         track_cache = self.state.feat is not None
         if track_cache:
@@ -710,7 +857,8 @@ class StreamScheduler:
             if g <= 0:
                 continue
             older = max((deficit[s] for s in order[:i]), default=0)
-            if self.allocator.free_pages - g >= older:
+            if (self.allocator.free_pages
+                    + self.allocator.reclaimable_pages) - g >= older:
                 got = self.allocator.alloc(g)       # gate implies it succeeds
                 if bt is None:
                     bt = np.array(self.state.block_tables)

@@ -1,0 +1,358 @@
+"""Block-causal prompt encoding + the persistent cross-request prefix cache.
+
+Differential contract (docs/ARCHITECTURE.md §4, block-causal mode):
+  * the mask term is EXACTLY ``kb <= qb`` over block ids (prompt = block -1):
+    a query block attends the prompt and its own/earlier blocks only, which
+    equals bidirectional attention restricted to a position PREFIX — so
+    every block's rows must bit-agree with a prefix-masked bidirectional
+    call, and prompt self-attention rows (prompt-only KV) must bit-agree
+    with the mask switched off entirely;
+  * ``bc_block == 0`` is the compile-out sentinel: ``block_causal=False``
+    threads no mask arguments anywhere and the program is structurally the
+    bidirectional engine (the rest of the suite passing unchanged is the
+    bit-identity evidence);
+  * dense and paged lowerings express the same masked read set — xla
+    bit-equal, pallas (interpret) at f32 tolerance — and whole-model
+    generation is dense==paged bit-identical, greedy and sampled;
+  * the FULL-refresh invariance exemption (``schedule.invariant_limit``) is
+    a value no-op: forcing every refresh to rewrite everything reproduces
+    the exempted engine bit for bit;
+  * the persistent prefix store admits an identical prompt across cycles
+    and requests with ZERO prompt-page allocations and bit-identical
+    output to the cold miss (greedy and sampled, mid-cycle admission
+    included), holds pages under store-owned claims after retirement, and
+    LRU-evicts under pool pressure.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs import GenerationConfig, SkipStage
+from repro.core import make_engine
+from repro.core.engine import DiffusionEngine
+from repro.core.schedule import invariant_limit
+from repro.kernels import ops
+from repro.runtime import PageAllocator, Request, StreamScheduler
+from repro.runtime.request import pad_and_stack
+
+PROMPT_LEN = 16
+GEN = dict(gen_length=16, block_length=8)
+PS = 8                              # t_total = 32 -> 4 vpages per slot
+N_VP = (PROMPT_LEN + GEN["gen_length"]) // PS
+N_PROMPT_VP = PROMPT_LEN // PS
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.reduced(configs.get_config("llada-8b"))
+    cfg = dataclasses.replace(cfg, n_layers=4)
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _bc_cfg(**kw):
+    base = dict(mode="es", skip_stages=(SkipStage(1, 0.5),),
+                prompt_refresh_period=2, block_refresh_period=4,
+                block_causal=True, **GEN)
+    base.update(kw)
+    return GenerationConfig(**base)
+
+
+def _requests(cfg, n, seed=0, dup=True, **kw):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(3, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    out = []
+    for i in range(n):
+        p = prompt.copy() if dup else \
+            rng.integers(3, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+        out.append(Request(prompt=p, sample_seed=100 + i, **kw))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the mask term: ops-level differential equivalences
+# ---------------------------------------------------------------------------
+
+BC_START, BC_BLOCK = 16, 8          # prompt 16 + two generation blocks of 8
+T = BC_START + 2 * BC_BLOCK
+
+
+def _qkv(key, lq=T, lkv=T):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 4, lq, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, lkv, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, lkv, 32), jnp.float32)
+    q_pos = jnp.arange(lq, dtype=jnp.int32)[None]
+    kv_pos = jnp.arange(lkv, dtype=jnp.int32)[None]
+    return q, k, v, q_pos, kv_pos
+
+
+def test_bc_rows_bit_equal_prefix_masked_bidirectional():
+    """Block-causal == bidirectional restricted to a position prefix: for
+    every query block, the bc rows must BIT-equal a bidirectional call whose
+    kv_pos invalidates everything past that block's horizon."""
+    q, k, v, q_pos, kv_pos = _qkv(jax.random.PRNGKey(0))
+    bc = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla",
+                                  bc_start=BC_START, bc_block=BC_BLOCK))
+    # rows of block b (incl. the prompt, b = -1) may read pos < horizon(b)
+    for blk, lo, hi in [(-1, 0, BC_START),
+                        (0, BC_START, BC_START + BC_BLOCK),
+                        (1, BC_START + BC_BLOCK, T)]:
+        horizon = BC_START + (blk + 1) * BC_BLOCK
+        kv_cut = jnp.where(kv_pos < horizon, kv_pos, -1)
+        want = np.asarray(ops.attention(q, k, v, q_pos, kv_cut, impl="xla"))
+        np.testing.assert_array_equal(
+            bc[:, :, lo:hi], want[:, :, lo:hi],
+            err_msg=f"block {blk} rows disagree with the prefix slice")
+
+
+def test_prompt_self_attention_rows_bit_equal_bidirectional():
+    """Where the masks are identical — prompt rows over prompt-only KV —
+    the bc flag must be an exact no-op."""
+    q, k, v, q_pos, kv_pos = _qkv(jax.random.PRNGKey(1),
+                                  lq=BC_START, lkv=BC_START)
+    off = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla"))
+    on = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla",
+                                  bc_start=BC_START, bc_block=BC_BLOCK))
+    np.testing.assert_array_equal(off, on)
+
+
+def test_bc_actually_masks_future_blocks():
+    """Guard against the term silently compiling out: block-0 rows see a
+    strictly smaller key set than bidirectional, so outputs must differ."""
+    q, k, v, q_pos, kv_pos = _qkv(jax.random.PRNGKey(2))
+    off = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla"))
+    on = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla",
+                                  bc_start=BC_START, bc_block=BC_BLOCK))
+    assert not np.array_equal(off[:, :, :BC_START + BC_BLOCK],
+                              on[:, :, :BC_START + BC_BLOCK])
+    # ...while the LAST block's mask row is all-ones either way
+    np.testing.assert_array_equal(off[:, :, BC_START + BC_BLOCK:],
+                                  on[:, :, BC_START + BC_BLOCK:])
+
+
+def test_bc_sentinel_compiles_out():
+    """bc_block == 0 must take the exact default code path."""
+    q, k, v, q_pos, kv_pos = _qkv(jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(
+        np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla")),
+        np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla",
+                                 bc_start=BC_START, bc_block=0)))
+    assert invariant_limit(GenerationConfig(**GEN), 16, 1, 16) is None
+
+
+def test_bc_dense_xla_equals_pallas_interpret():
+    q, k, v, q_pos, kv_pos = _qkv(jax.random.PRNGKey(4))
+    kw = dict(bc_start=BC_START, bc_block=BC_BLOCK)
+    want = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="xla", **kw))
+    got = np.asarray(ops.attention(q, k, v, q_pos, kv_pos, impl="pallas",
+                                   block_q=8, block_kv=128, **kw))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_bc_paged_walk_xla_bit_equals_dense_and_matches_pallas():
+    """The masked block-table walk: paged xla must BIT-equal dense xla on
+    the gathered view; the pallas grid walk agrees at f32 tolerance."""
+    rng = np.random.default_rng(5)
+    n_vp = T // PS
+    num_pages = 1 + n_vp
+    bt = jnp.asarray(1 + np.asarray(rng.permutation(n_vp), np.int32))[None]
+    pool_k = jnp.asarray(rng.normal(size=(num_pages, PS, 2, 32)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(num_pages, PS, 2, 32)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(1, 4, T, 32)), jnp.float32)
+    q_pos = jnp.arange(T, dtype=jnp.int32)[None]
+    kv_pos = jnp.arange(T, dtype=jnp.int32)[None]
+    kw = dict(bc_start=BC_START, bc_block=BC_BLOCK)
+    k_d = jnp.swapaxes(ops.gather_pages(pool_k, bt), 1, 2)
+    v_d = jnp.swapaxes(ops.gather_pages(pool_v, bt), 1, 2)
+    want = np.asarray(ops.attention(q, k_d, v_d, q_pos, kv_pos,
+                                    impl="xla", **kw))
+    got_xla = np.asarray(ops.paged_attention(
+        q, pool_k, pool_v, q_pos, kv_pos, bt, page_size=PS, impl="xla", **kw))
+    np.testing.assert_array_equal(got_xla, want)
+    got_pl = np.asarray(ops.paged_attention(
+        q, pool_k, pool_v, q_pos, kv_pos, bt, page_size=PS,
+        impl="pallas", **kw))
+    np.testing.assert_allclose(got_pl, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# whole-model generation under block_causal
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_generate_dense_equals_paged_bc(small_model, temperature):
+    cfg, model, params = small_model
+    gen = _bc_cfg(temperature=temperature)
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (2, PROMPT_LEN),
+                                0, cfg.vocab_size)
+    dense = np.asarray(make_engine(model, gen).generate(
+        params, prompt, jax.random.PRNGKey(1)))
+    paged = np.asarray(DiffusionEngine(model, gen, paged=True, page_size=PS)
+                       .generate(params, prompt, jax.random.PRNGKey(1)))
+    np.testing.assert_array_equal(dense, paged)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_invariant_exemption_is_value_noop(small_model, paged, monkeypatch):
+    """Forcing every FULL refresh to rewrite the exempt region must change
+    nothing: under block-causal masking those K/V are iteration-invariant,
+    so the skipped writes were value no-ops by construction."""
+    cfg, model, params = small_model
+    gen = _bc_cfg()
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (2, PROMPT_LEN),
+                                0, cfg.vocab_size)
+    ekw = dict(paged=True, page_size=PS) if paged else {}
+    exempt = np.asarray(DiffusionEngine(model, gen, **ekw).generate(
+        params, prompt, jax.random.PRNGKey(1)))
+    monkeypatch.setattr("repro.core.engine.resolve_invariant_limit",
+                        lambda gen, bs, iters, gen_start: None)
+    full = np.asarray(DiffusionEngine(model, gen, **ekw).generate(
+        params, prompt, jax.random.PRNGKey(1)))
+    np.testing.assert_array_equal(exempt, full)
+
+
+# ---------------------------------------------------------------------------
+# the persistent cross-request prefix store
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_persistent_store_unit():
+    al = PageAllocator(8, persistent=True)
+    g1, g2 = al.alloc(3), al.alloc(2)
+    al.register_prefix("k1", (0, [(0, g1[0]), (1, g1[1])]))
+    al.register_prefix("k2", (1, [(0, g2[0])]))
+    al.release(g1)
+    al.release(g2)                   # every slot claim dies...
+    assert al.used_pages == 3, "store claims must keep prompt pages resident"
+    assert al.lookup_prefix("k1") is not None   # LRU touch: k1 now newest
+    got = al.alloc(6)                # pool pressure: evict k2 then k1
+    assert got is not None and len(got) == 6
+    assert al.prefix_evictions == 2
+    assert al.lookup_prefix("k1") is None and al.lookup_prefix("k2") is None
+    al.release(got)
+    assert al.free_pages == al.num_pages - 1, "nothing may leak"
+
+
+def test_persistent_mode_requires_block_causal(small_model):
+    """Bidirectional sharing keeps its same-cycle-only contract: the store
+    only switches on for the sound flag pair."""
+    cfg, model, params = small_model
+    bidi = StreamScheduler(model, params,
+                           _bc_cfg(block_causal=False),
+                           prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                           prefix_sharing=True)
+    assert not bidi.persistent_prefix and not bidi.allocator.persistent
+    bc = StreamScheduler(model, params, _bc_cfg(),
+                         prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                         prefix_sharing=True)
+    assert bc.persistent_prefix and bc.allocator.persistent
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_persistent_hit_zero_prompt_allocs_bit_identical(small_model,
+                                                         temperature):
+    """The tentpole acceptance check: a second identical-prompt request in a
+    LATER cycle (the first already retired) admits with zero prompt-page
+    allocations and decodes bit-identically to the cold miss."""
+    cfg, model, params = small_model
+    gen = _bc_cfg(temperature=temperature)
+    r1, r2 = _requests(cfg, 2, seed=11)
+    r2.sample_seed = r1.sample_seed          # same stream: outputs must agree
+    sched = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            prefix_sharing=True)
+    sched.submit(r1)
+    sched.drain()
+    assert sched.stats.prefix_hits == 0
+    assert sched.stats.pages_in_use == N_PROMPT_VP, \
+        "the store must keep the prompt pages resident after retirement"
+    used_cold = sched.allocator.used_pages
+    sched.submit(r2)
+    sched.step()                             # admission + prefill
+    assert sched.stats.prefix_hits == 1
+    assert sched.allocator.used_pages - used_cold == N_VP - N_PROMPT_VP, \
+        "warm admission must allocate private generation pages only"
+    sched.drain()
+    np.testing.assert_array_equal(
+        r2.output, r1.output,
+        err_msg="persistent-cache hit diverged from the cold miss")
+    ref = np.asarray(make_engine(model, gen).generate(
+        params, jnp.asarray(pad_and_stack([r1], 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0),
+        sample_seeds=jnp.asarray([r1.sample_seed])))
+    np.testing.assert_array_equal(r1.output, ref[0, PROMPT_LEN:])
+
+
+def test_persistent_hit_mid_cycle_admission(small_model):
+    """Warm hit while the owner is still decoding (any-iteration admission),
+    sampled with distinct seeds: both replay their offline streams."""
+    cfg, model, params = small_model
+    gen = _bc_cfg(temperature=0.7)
+    reqs = _requests(cfg, 2, seed=13)
+    sched = StreamScheduler(model, params, gen, max_slots=2,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            prefix_sharing=True, early_advance=True)
+    sched.submit(reqs[0])
+    for _ in range(3):
+        sched.step()                         # owner mid-generation
+    sched.submit(reqs[1])
+    sched.drain()
+    assert sched.stats.prefix_hits == 1
+    assert sched.stats.cow_forks == 0, \
+        "block-causal sharing needs no CoW even when sampled"
+    ref = np.asarray(make_engine(model, gen).generate(
+        params, jnp.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0),
+        sample_seeds=jnp.asarray([r.sample_seed for r in reqs])))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            r.output, ref[i, PROMPT_LEN:],
+            err_msg=f"mid-cycle warm admission diverged for request {i}")
+
+
+def test_persistent_store_lru_eviction_under_pressure(small_model):
+    """A pool too small to hold two requests' pages plus a resident store
+    entry: admission pressure must LRU-evict the store (never fail), and a
+    re-run of the evicted prompt still decodes identically (cold again)."""
+    cfg, model, params = small_model
+    gen = _bc_cfg()
+    a1, b1 = _requests(cfg, 2, seed=17, dup=False)
+    sched = StreamScheduler(model, params, gen, max_slots=1,
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            kv_pages=N_VP + 2, prefix_sharing=True)
+    sched.submit(a1)
+    sched.drain()
+    assert sched.stats.pages_in_use == N_PROMPT_VP
+    sched.submit(b1)                 # needs N_VP > free: evicts A's entry
+    sched.drain()
+    assert sched.stats.prefix_evictions == 1
+    assert sched.stats.prefix_hits == 0
+    a2 = Request(prompt=a1.prompt.copy(), sample_seed=a1.sample_seed)
+    sched.submit(a2)                 # A was evicted: cold again, evicts B
+    sched.drain()
+    assert sched.stats.prefix_evictions == 2
+    np.testing.assert_array_equal(a2.output, a1.output)
+
+
+def test_invariant_tokens_skipped_gauge(small_model):
+    """Serving must surface how much refresh rewriting the exemption saved;
+    with the bc flag off the gauge stays untouched."""
+    cfg, model, params = small_model
+    for bc, expect_skip in [(True, True), (False, False)]:
+        gen = _bc_cfg(block_causal=bc)
+        sched = StreamScheduler(model, params, gen, max_slots=1,
+                                prompt_len=PROMPT_LEN, paged=True,
+                                page_size=PS)
+        sched.submit(_requests(cfg, 1, seed=19)[0])
+        sched.drain()
+        assert (sched.stats.invariant_tokens_skipped > 0) == expect_skip
+        assert sched.stats.gauges()["invariant_tokens_skipped"] == \
+            sched.stats.invariant_tokens_skipped

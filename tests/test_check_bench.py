@@ -1,0 +1,100 @@
+"""Unit tests for tools/check_bench.py — the CI bench regression guard.
+
+The guard gates merges, so it gets its own tests: a guard that silently
+stopped checking (path typo, schema drift) is worse than no guard.
+Synthetic BENCH JSON fixtures keep this fast and machine-independent.
+"""
+import importlib.util
+import os
+
+cb_spec = importlib.util.spec_from_file_location(
+    "check_bench",
+    os.path.join(os.path.dirname(__file__), "..", "tools", "check_bench.py"))
+cb = importlib.util.module_from_spec(cb_spec)
+cb_spec.loader.exec_module(cb)
+
+
+def _result(*, pp_gain=3.0, pp_conc=3.0, hit_rate=1.0, allocs=0,
+            bit_identical=True, with_pp=True) -> dict:
+    """A minimal healthy BENCH_serving.json payload."""
+    res = {
+        "lockstep": {"goodput": 10.0},
+        "stream": {"goodput": 20.0},
+        "paged": {"goodput": 20.0},
+        "early_advance": {
+            "outputs_bit_identical": True,
+            "early": {"goodput": 25.0, "p95": 1.0},
+            "aligned": {"goodput": 20.0, "p95": 2.0},
+        },
+        "feature_cache": {"goodput_gain": 1.5, "greedy_agreement": 0.95},
+        "suffix_window": {"goodput_gain": 1.2, "concurrency_gain": 1.5,
+                          "greedy_agreement": 0.95},
+    }
+    if with_pp:
+        res["prefix_persist"] = {
+            "goodput_gain": pp_gain,
+            "concurrency_gain": pp_conc,
+            "hit_rate": hit_rate,
+            "warm_prompt_page_allocs": allocs,
+            "outputs_bit_identical": bit_identical,
+        }
+    return res
+
+
+def test_healthy_result_passes():
+    assert cb.check(_result(), _result(), tol=0.10) == []
+
+
+def test_prefix_persist_guarded_gains():
+    base = _result()
+    # within tolerance: 5% drop passes
+    assert cb.check(_result(pp_gain=2.85), base, tol=0.10) == []
+    # beyond tolerance: 20% drop fails, and names the metric
+    errs = cb.check(_result(pp_gain=2.4), base, tol=0.10)
+    assert any("prefix_persist.goodput_gain" in e for e in errs)
+    errs = cb.check(_result(pp_conc=1.0), base, tol=0.10)
+    assert any("prefix_persist.concurrency_gain" in e for e in errs)
+
+
+def test_prefix_persist_missing_from_new_result_fails():
+    errs = cb.check(_result(with_pp=False), _result(), tol=0.10)
+    assert any("prefix_persist.goodput_gain" in e and "missing" in e
+               for e in errs)
+
+
+def test_prefix_persist_absent_from_baseline_skips_gains():
+    """A baseline predating the section must not fail the gain guard —
+    but the new result's own structural invariants still apply."""
+    base = _result(with_pp=False)
+    assert cb.check(_result(), base, tol=0.10) == []
+    errs = cb.check(_result(hit_rate=0.5), base, tol=0.10)
+    assert any("hit_rate" in e for e in errs)
+
+
+def test_prefix_persist_structural_floors():
+    base = _result()
+    errs = cb.check(_result(hit_rate=0.99), base, tol=0.10)
+    assert any("prefix_persist.hit_rate" in e for e in errs)
+    errs = cb.check(_result(allocs=3), base, tol=0.10)
+    assert any("warm_prompt_page_allocs" in e for e in errs)
+    errs = cb.check(_result(bit_identical=False), base, tol=0.10)
+    assert any("outputs_bit_identical" in e for e in errs)
+
+
+def test_lockstep_normalization_preserved():
+    """The dotted-goodput guard still normalizes by same-run lock-step:
+    a uniformly 2x-slower machine must NOT trip the guard."""
+    base = _result()
+    slow = _result()
+    for k in ("lockstep", "stream", "paged"):
+        slow[k] = {"goodput": base[k]["goodput"] / 2}
+    slow["early_advance"]["early"]["goodput"] /= 2
+    slow["early_advance"]["aligned"]["goodput"] /= 2
+    assert cb.check(slow, base, tol=0.10) == []
+
+
+def test_real_regression_still_caught():
+    slow = _result()
+    slow["stream"]["goodput"] = 12.0        # speedup 2.0x -> 1.2x
+    errs = cb.check(slow, _result(), tol=0.10)
+    assert any("stream.goodput" in e for e in errs)

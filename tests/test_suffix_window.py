@@ -259,8 +259,11 @@ def test_max_blocks_hard_cap(small_model):
 
 
 def test_lazy_reserve_gating(small_model):
-    """lazy_reserve requires paged + a finite window, and excludes
-    prefix_sharing (deficit accounting counts private pages only)."""
+    """lazy_reserve requires paged + a finite window.  The historical third
+    exclusion — prefix_sharing — is LIFTED: deficit accounting is
+    private-pages-only, so shared prompt pages subtract from the up-front
+    need while growth deficits (all-private far suffix) are untouched, and
+    the combination now constructs cleanly."""
     cfg, model, params = small_model
     with pytest.raises(AssertionError):
         StreamScheduler(model, params, _cfg(window_blocks=1),
@@ -268,7 +271,38 @@ def test_lazy_reserve_gating(small_model):
     with pytest.raises(AssertionError):
         StreamScheduler(model, params, _cfg(), prompt_len=PROMPT_LEN,
                         paged=True, page_size=PS, lazy_reserve=True)
-    with pytest.raises(AssertionError):
-        StreamScheduler(model, params, _cfg(window_blocks=1),
-                        prompt_len=PROMPT_LEN, paged=True, page_size=PS,
-                        lazy_reserve=True, prefix_sharing=True)
+    sched = StreamScheduler(model, params, _cfg(window_blocks=1),
+                            prompt_len=PROMPT_LEN, paged=True, page_size=PS,
+                            lazy_reserve=True, prefix_sharing=True)
+    assert sched.lazy_reserve and sched.prefix_sharing
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_lazy_reserve_with_prefix_sharing(small_model, temperature):
+    """Regression for the lifted lazy_reserve × prefix_sharing exclusion:
+    duplicate prompts admitted together under a finite window must (a)
+    actually share prompt pages, (b) still defer far-suffix pages, and (c)
+    replay bit-identically offline — greedy and sampled."""
+    cfg, model, params = small_model
+    g = _cfg(window_blocks=1, temperature=temperature)
+    reqs = _requests(cfg, 2)
+    reqs[1] = Request(prompt=reqs[0].prompt.copy(),
+                      sample_seed=reqs[1].sample_seed)
+    outs, sched = _serve(model, params, g, reqs,
+                         lazy_reserve=True, prefix_sharing=True)
+    assert sched.stats.pages_deferred > 0, "lazy deferral must stay active"
+    n_prompt_vp = PROMPT_LEN // PS
+    if temperature > 0:
+        # sampled: CoW reserves offset the sharing win page-for-page, so
+        # the proof of sharing is the fork the divergence forced
+        assert sched.stats.cow_forks == n_prompt_vp
+    else:
+        assert sched.stats.cow_forks == 0
+        assert sched.stats.peak_pages_in_use < 2 * N_VP, \
+            "duplicate prompts should have shared prompt pages"
+    assert sched.stats.pages_in_use == 0
+    ref = _offline_ref(model, params, g, reqs)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(
+            outs[i], ref[i, PROMPT_LEN:],
+            err_msg=f"lazy+sharing replay diverged for request {i}")

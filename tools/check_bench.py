@@ -42,6 +42,15 @@ reservation vs lazy windowed at equal pool bytes on one trace):
     concurrency gain must stay at or above ``CONCURRENCY_GAIN_FLOOR``
   * ``suffix_window.greedy_agreement`` — the windowed run's greedy
     agreement with the unwindowed replay holds the same quality floor
+and the persistent prefix store's section (self-normalized: unshared vs
+warm-store waves share one model, prompt, and pool):
+  * ``prefix_persist.goodput_gain`` and ``prefix_persist.concurrency_gain``
+    — guarded against the baseline with the same --tol
+  * three structural invariants that must hold regardless of machine
+    speed: ``outputs_bit_identical`` is true, ``hit_rate`` stays at
+    ``PREFIX_HIT_RATE_FLOOR`` (every warm admission reuses the store), and
+    ``warm_prompt_page_allocs == 0`` (a warm wave never re-allocates a
+    resident prompt page)
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -68,6 +77,8 @@ GUARDED_GAINS = (
     "feature_cache.goodput_gain",
     "suffix_window.goodput_gain",
     "suffix_window.concurrency_gain",
+    "prefix_persist.goodput_gain",
+    "prefix_persist.concurrency_gain",
 )
 
 # minimum greedy agreement of the cached run vs the uncached replay —
@@ -78,6 +89,10 @@ AGREEMENT_FLOOR = 0.80
 # the suffix-window headline: lazy windowed admission must fit at least
 # 1.5x the eager baseline's residents into the same pool bytes
 CONCURRENCY_GAIN_FLOOR = 1.5
+
+# every warm-wave admission must reuse the persistent store (the waves are
+# deterministic, so anything below 1.0 is a lost hit, not noise)
+PREFIX_HIT_RATE_FLOOR = 1.0
 
 
 def _get(d: dict, path: str):
@@ -151,6 +166,23 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"{'missing' if cg is None else f'{cg:.2f}x'} is below the "
                 f"floor {CONCURRENCY_GAIN_FLOOR:.2f}x (lazy windowed "
                 f"admission must beat eager reservation at equal pool bytes)")
+    pp = new.get("prefix_persist")
+    if pp is not None:
+        if not pp.get("outputs_bit_identical"):
+            errors.append("prefix_persist.outputs_bit_identical is not true")
+        hr = pp.get("hit_rate")
+        if hr is None or hr < PREFIX_HIT_RATE_FLOOR:
+            errors.append(
+                f"prefix_persist.hit_rate "
+                f"{'missing' if hr is None else f'{hr:.2f}'} is below the "
+                f"floor {PREFIX_HIT_RATE_FLOOR:.2f} (every warm admission "
+                f"must reuse the persistent store)")
+        allocs = pp.get("warm_prompt_page_allocs")
+        if allocs != 0:
+            errors.append(
+                f"prefix_persist.warm_prompt_page_allocs "
+                f"{'missing' if allocs is None else allocs} != 0 — a warm "
+                f"wave re-allocated resident prompt pages")
     ea = new.get("early_advance")
     if ea is not None:
         if not ea.get("outputs_bit_identical"):
@@ -202,6 +234,11 @@ def main() -> int:
             print(f"  suffix_window.concurrency_gain: "
                   f"{sw['concurrency_gain']:.2f}x "
                   f"(floor {CONCURRENCY_GAIN_FLOOR:.2f}x)")
+    pp = new.get("prefix_persist")
+    if pp is not None and pp.get("hit_rate") is not None:
+        print(f"  prefix_persist.hit_rate: {pp['hit_rate']:.2f} "
+              f"(floor {PREFIX_HIT_RATE_FLOOR:.2f}), "
+              f"warm_prompt_page_allocs={pp.get('warm_prompt_page_allocs')}")
     if errors:
         print("serving-bench regression guard FAILED:", file=sys.stderr)
         for e in errors:

@@ -1,0 +1,263 @@
+#!/usr/bin/env python3
+"""Seeded randomized serving-trace differential harness.
+
+Each *trace* is a fully seed-determined serving scenario: random prompt
+lengths, duplicate-prompt ratio, staggered arrival steps, and a random
+feature-flag assignment (paged pool, prefix sharing, block-causal +
+persistent prefix cache, lazy window reservation, early advance, adaptive
+feature cache, sampling temperature).  The trace is driven step by step
+through ``StreamScheduler`` and must satisfy, at EVERY step:
+
+  * allocator refcounts are never negative, and free/used partition the
+    pool exactly (``used + free == num_pages - 1``);
+  * the free list holds no duplicates and no page with a live claim;
+  * claims cover mappings: a physical page mapped by k resident slots has
+    refcount >= k, and no slot maps the same page twice (the "no page
+    mapped twice writable" soundness condition — a multiply-mapped page is
+    always refcounted shared);
+  * the garbage page (0) is never mapped into a block table;
+  * the host-side claim ledger balances: every refcount is accounted for
+    by a slot's page list, a cohort's CoW reserve, or the persistent
+    prefix store.
+
+and at the end of the trace every request's output must replay BIT-EQUAL
+to the offline ``engine.generate`` of the same layout (dense or paged)
+under the same generation config and per-request sample seeds.
+
+Library use (what tests/test_serving_fuzz.py drives)::
+
+    res = run_trace(model, params, seed)     # raises on any violation
+
+CLI smoke (builds the reduced 4-layer config; CPU-safe)::
+
+    PYTHONPATH=src python tools/fuzz_serving.py --traces 20 --seed 0
+
+A failing trace prints and (when ``--artifact`` / ``$REPRO_FUZZ_ARTIFACT``
+is set) writes a JSON artifact with the seed and resolved flag assignment,
+so CI can upload the exact repro.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+PROMPT_LEN = 16
+GEN_LENGTH = 16
+BLOCK_LENGTH = 8
+PAGE_SIZE = 8
+N_VP = (PROMPT_LEN + GEN_LENGTH) // PAGE_SIZE
+
+
+def trace_flags(seed: int) -> dict:
+    """Resolve a seed to a serving-trace configuration (pure; the same seed
+    always fuzzes the same scenario)."""
+    rng = np.random.default_rng(seed)
+    paged = bool(rng.random() < 0.85)        # dense traces keep coverage
+    lazy = bool(paged and rng.random() < 0.35)
+    sharing = bool(paged and rng.random() < 0.6)
+    flags = dict(
+        n_requests=int(rng.integers(2, 6)),
+        max_slots=int(rng.integers(1, 4)),
+        dup_ratio=float(rng.choice([0.0, 0.5, 1.0])),
+        arrival_span=int(rng.integers(0, 7)),
+        paged=paged,
+        prefix_sharing=sharing,
+        block_causal=bool(rng.random() < 0.5),
+        lazy_reserve=lazy,
+        window_blocks=1 if lazy else 0,
+        early_advance=bool(rng.random() < 0.5),
+        adaptive_cache=bool(rng.random() < 0.35),
+        temperature=float(rng.choice([0.0, 0.7])),
+        tight_pool=bool(paged and rng.random() < 0.3),
+    )
+    return flags
+
+
+def _gen_config(flags: dict):
+    from repro.configs import GenerationConfig, SkipStage
+
+    kw = dict(mode="es", skip_stages=(SkipStage(1, 0.5),),
+              gen_length=GEN_LENGTH, block_length=BLOCK_LENGTH,
+              prompt_refresh_period=2, block_refresh_period=4,
+              temperature=flags["temperature"],
+              window_blocks=flags["window_blocks"],
+              block_causal=flags["block_causal"])
+    if flags["adaptive_cache"]:
+        kw.update(cache_prompt_interval=2, cache_refresh_fraction=0.5)
+    return GenerationConfig(**kw)
+
+
+def _requests(flags: dict, vocab_size: int, seed: int):
+    from repro.runtime import Request
+
+    rng = np.random.default_rng(seed + 1)
+    reqs, prompts = [], []
+    for i in range(flags["n_requests"]):
+        if prompts and rng.random() < flags["dup_ratio"]:
+            p = prompts[int(rng.integers(0, len(prompts)))].copy()
+        else:
+            p = rng.integers(3, vocab_size,
+                             int(rng.integers(4, PROMPT_LEN + 1))
+                             ).astype(np.int32)
+        prompts.append(p)
+        reqs.append(Request(prompt=p.copy(), sample_seed=1000 + i))
+    arrivals = sorted(int(a) for a in
+                      rng.integers(0, flags["arrival_span"] + 1,
+                                   flags["n_requests"]))
+    return reqs, arrivals
+
+
+def check_allocator_invariants(sched) -> None:
+    """Assert every pool-accounting invariant on the live scheduler."""
+    al = sched.allocator
+    if al is None:
+        return
+    rc = al._refcount
+    assert all(r >= 0 for r in rc), f"negative refcount: {rc}"
+    assert len(set(al._free)) == len(al._free), "duplicate page in free list"
+    assert all(rc[p] == 0 for p in al._free), "freed page with a live claim"
+    assert al.used_pages + al.free_pages == al.num_pages - 1, \
+        "used/free do not partition the pool"
+    assert rc[0] == 0, "the garbage page must never carry a claim"
+    # claims cover mappings
+    bt = np.asarray(sched.state.block_tables)
+    mapped: dict[int, int] = {}
+    for slot, req in enumerate(sched.slot_req):
+        if req is None:
+            continue
+        row = [int(pg) for pg in bt[slot] if pg >= 0]
+        assert 0 not in row, f"garbage page mapped by slot {slot}"
+        assert len(set(row)) == len(row), \
+            f"slot {slot} maps a physical page twice"
+        for pg in row:
+            mapped[pg] = mapped.get(pg, 0) + 1
+    for pg, n in mapped.items():
+        assert rc[pg] >= n, (
+            f"page {pg} mapped by {n} slots but refcount {rc[pg]} — "
+            "a multiply-mapped page must be refcounted shared")
+    # the host-side claim ledger balances
+    ledger = sum(len(p) for p in sched.slot_pages)
+    ledger += sum(len(res) for c in sched.cohorts
+                  for res in c["reserve"].values())
+    ledger += sum(len(page_map) for _, page_map in al._prefix.values()) \
+        if al.persistent else 0
+    assert ledger == sum(rc), (
+        f"claim ledger {ledger} != total refcount {sum(rc)} — a claim "
+        "leaked or double-counted")
+
+
+def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
+    """Run one seeded trace; raises AssertionError on any invariant
+    violation or replay divergence.  Returns summary stats."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import DiffusionEngine
+    from repro.runtime import StreamScheduler
+    from repro.runtime.request import pad_and_stack
+
+    flags = dict(flags or trace_flags(seed))
+    gen = _gen_config(flags)
+    reqs, arrivals = _requests(flags, model.cfg.vocab_size, seed)
+    skw = dict(max_slots=flags["max_slots"], prompt_len=PROMPT_LEN,
+               early_advance=flags["early_advance"])
+    if flags["paged"]:
+        skw.update(paged=True, page_size=PAGE_SIZE,
+                   prefix_sharing=flags["prefix_sharing"],
+                   lazy_reserve=flags["lazy_reserve"])
+        if flags["tight_pool"]:
+            # just enough for ~1.5 requests: exercises page-gating, FIFO
+            # waits, and persistent-store LRU eviction
+            skw["kv_pages"] = N_VP + N_VP // 2 + 1
+    sched = StreamScheduler(model, params, gen, **skw)
+    pending = list(zip(arrivals, reqs))
+    steps = 0
+    while pending or sched.has_work():
+        while pending and pending[0][0] <= steps:
+            sched.submit(pending.pop(0)[1])
+        sched.step()
+        check_allocator_invariants(sched)
+        steps += 1
+        assert steps < 5000, "trace did not terminate"
+    assert sched.stats.completed == len(reqs)
+    # end-of-trace residency: only the persistent store may keep pages
+    if sched.allocator is not None:
+        store = sum(len(m) for _, m in sched.allocator._prefix.values()) \
+            if sched.allocator.persistent else 0
+        assert sched.allocator.used_pages == store, \
+            "pages leaked past retirement"
+    # offline differential replay, same layout
+    ekw = dict(paged=True, page_size=PAGE_SIZE) if flags["paged"] else {}
+    eng = DiffusionEngine(model, gen, **ekw)
+    # paged serving attention-masks the left pad (prompt_start); dense
+    # serving attends it as pad tokens (scheduler admission sets 0) — the
+    # replay must mirror whichever layout the trace ran
+    ps = [PROMPT_LEN - len(r.prompt) for r in reqs] if flags["paged"] \
+        else [0] * len(reqs)
+    ref = np.asarray(eng.generate(
+        params, jnp.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
+        jax.random.PRNGKey(0),
+        prompt_start=jnp.asarray(ps, jnp.int32),
+        sample_seeds=jnp.asarray([r.sample_seed for r in reqs])))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            r.output, ref[i, PROMPT_LEN:],
+            err_msg=f"seed {seed}: request {i} diverged from offline replay "
+                    f"(flags {flags})")
+    return dict(seed=seed, steps=steps, flags=flags,
+                prefix_hits=sched.stats.prefix_hits,
+                prefix_evictions=sched.stats.prefix_evictions,
+                cow_forks=sched.stats.cow_forks)
+
+
+def write_artifact(path: str, seed: int, flags: dict, error: str) -> None:
+    with open(path, "w") as f:
+        json.dump(dict(seed=seed, flags=flags, error=error), f, indent=2)
+
+
+def _build_reduced_model():
+    import jax
+
+    from repro import configs
+    from repro.models import build_model
+
+    cfg = configs.reduced(configs.get_config("llada-8b"))
+    cfg = dataclasses.replace(cfg, n_layers=4)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--traces", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0, help="first trace seed")
+    ap.add_argument("--artifact",
+                    default=os.environ.get("REPRO_FUZZ_ARTIFACT", ""),
+                    help="write failing seed/flags JSON here")
+    args = ap.parse_args(argv)
+    model, params = _build_reduced_model()
+    for seed in range(args.seed, args.seed + args.traces):
+        flags = trace_flags(seed)
+        try:
+            res = run_trace(model, params, seed, flags=flags)
+        except AssertionError as e:
+            print(f"FAIL seed={seed} flags={flags}\n{e}", file=sys.stderr)
+            if args.artifact:
+                write_artifact(args.artifact, seed, flags, str(e))
+            return 1
+        print(f"ok seed={res['seed']} steps={res['steps']} "
+              f"hits={res['prefix_hits']} evict={res['prefix_evictions']} "
+              f"forks={res['cow_forks']}")
+    print(f"{args.traces} traces: zero divergences, zero violations")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
