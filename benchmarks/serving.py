@@ -67,6 +67,21 @@ and the costmodel's ``suffix_window_report`` supplies the analytic
 admission/FLOP bounds the measured gauges are asserted against.  Quality is
 the greedy agreement of windowed outputs vs the unwindowed replay.
 
+An eighth pair of runs measures **priority preemption with host spill/resume**
+under mixed-SLO traffic: three full-length batch jobs (class 0) arrive at
+t=0 against a pool sized for exactly TWO of their extents, and a trickle of
+one-block interactive requests (class 1) arrives while they run.  Without
+preemption the interactive head-of-line blocks until a batch extent retires
+(a multi-block wait); with ``preemption=True`` the scheduler spills the
+youngest batch resident's pages to host memory at its block boundary, admits
+the interactive immediately, and resumes the victim bit-identically once
+pages free.  Reported: interactive p95 with preemption off vs on at EQUAL
+pool bytes (the gain is the SLO win preemption exists for), the failure
+gauges (``preemptions``/``pages_spilled``/``resume_p50``), and the
+structural gate that every request's greedy output is bit-identical across
+the two runs — spill/resume must be indistinguishable from an
+uninterrupted replay.
+
 The harness entry (``benchmarks.run``) always writes ``BENCH_serving.json``
 next to the CWD so the perf trajectory accumulates per commit (the README
 documents every field); the CLI writes JSON only where ``--json`` points.
@@ -112,6 +127,8 @@ SW_POOL_PAGES = 29              # allocatable pages: one page short of three
                                 # full extents, so eager reservation gates
                                 # at 2 resident while lazy admission (8
                                 # pages + 2-page deficit each) fits 3 (1.5x)
+MIXED_BATCH = 3                 # class-0 full-length jobs, all at t=0
+MIXED_INTERACTIVE = 4           # class-1 one-block requests, staggered
 PERSIST_POOL_PAGES = 6          # prefix-persist pool: a 1-block request
                                 # spans 4 pages (3 prompt + 1 private), so
                                 # unshared admission gates at 1 resident
@@ -446,6 +463,84 @@ def _run_prefix_persist(bm, gcfg: GenerationConfig, *, persist: bool) -> dict:
     }
 
 
+def _mk_mixed_requests(bm) -> tuple[list[Request], list[Request]]:
+    """Deterministic mixed-SLO mix: full-length batch jobs (class 0) and
+    one-block interactive requests (class 1) — rebuilt per run so the two
+    replays are prompt-for-prompt identical."""
+    rng = np.random.default_rng(21)
+    vocab = bm.model.cfg.vocab_size
+    batch = [Request(prompt=rng.integers(3, vocab, PROMPT_LEN
+                                         ).astype(np.int32), priority=0)
+             for _ in range(MIXED_BATCH)]
+    inter = [Request(prompt=rng.integers(3, vocab, PROMPT_LEN
+                                         ).astype(np.int32), priority=1,
+                     max_new_tokens=BLOCK_LENGTH)
+             for _ in range(MIXED_INTERACTIVE)]
+    return batch, inter
+
+
+def _run_mixed_slo(bm, gcfg: GenerationConfig, *, preempt: bool,
+                   kv_pages: int, mean_ia: float) -> dict:
+    """Mixed-SLO trace at a pool of exactly two batch extents: interactive
+    requests either head-of-line block behind the batch jobs (preemption
+    off) or spill one to host and jump the line (preemption on)."""
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
+                            prompt_len=PROMPT_LEN, paged=True,
+                            page_size=PAGE_SIZE, kv_pages=kv_pages,
+                            preemption=preempt)
+    # warm the compile cache; under preemption, ALSO the jitted
+    # spill-restore scatter, by forcing one preemption before the clock:
+    # two class-0 jobs fill the pool, a class-1 arrival must spill one
+    rng = np.random.default_rng(33)
+    vocab = bm.model.cfg.vocab_size
+    for _ in range(2):
+        sched.submit(Request(prompt=rng.integers(3, vocab, PROMPT_LEN
+                                                 ).astype(np.int32),
+                             priority=0))
+    if preempt:
+        sched.step()
+        sched.submit(Request(prompt=rng.integers(3, vocab, PROMPT_LEN
+                                                 ).astype(np.int32),
+                             priority=1, max_new_tokens=BLOCK_LENGTH))
+    sched.drain()
+    if preempt and sched.stats.preemptions == 0:
+        raise RuntimeError("mixed_slo warm-up never exercised the "
+                           "spill/restore path (pool not tight enough?)")
+    pages_total = sched.stats.pages_total
+    sched.stats.__init__()
+    sched.stats.pages_total = pages_total
+
+    batch, inter = _mk_mixed_requests(bm)
+    reqs = batch + inter
+    arrivals = np.asarray(
+        [0.0] * MIXED_BATCH
+        + [mean_ia * (1 + i) for i in range(MIXED_INTERACTIVE)])
+    makespan = _replay(sched.submit, sched.step,
+                       lambda: not sched.has_work(), arrivals, reqs)
+    if sched.stats.completed != len(reqs):
+        raise RuntimeError(
+            f"mixed_slo run completed {sched.stats.completed} of "
+            f"{len(reqs)} requests")
+    int_lat = np.asarray([r.latency_s for r in inter])
+    batch_lat = np.asarray([r.latency_s for r in batch])
+    return {
+        "preemption": preempt,
+        "goodput": sched.stats.tokens_out / makespan,
+        "makespan": makespan,
+        "completed": sched.stats.completed,
+        "interactive_p50": float(np.percentile(int_lat, 50)),
+        "interactive_p95": float(np.percentile(int_lat, 95)),
+        "batch_p95": float(np.percentile(batch_lat, 95)),
+        "preemptions": sched.stats.preemptions,
+        "pages_spilled": sched.stats.pages_spilled,
+        "resume_p50": sched.stats.resume_p50,
+        "deadline_rejects": sched.stats.deadline_rejects,
+        "poisoned_requests": sched.stats.poisoned_requests,
+        "pages_total": pages_total,
+        "outputs": [r.output.tolist() for r in reqs],
+    }
+
+
 def _measure_cycle_s(bm, gcfg: GenerationConfig) -> float:
     """Wall time of one warmed block cycle of the streaming engine."""
     sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
@@ -587,6 +682,31 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
         "greedy_agreement": float((out_full == out_win).mean()),
         "bound": sw_bound,
     }
+    # priority preemption under mixed-SLO traffic: batch jobs vs a trickle
+    # of interactive requests at EQUAL pool bytes (exactly two batch
+    # extents) — preemption off head-of-line blocks the interactive class,
+    # preemption on spills a batch resident to host and admits it now
+    mx_pages = 2 * n_vp + 1
+    mixed_off = _run_mixed_slo(bm, gcfg, preempt=False, kv_pages=mx_pages,
+                               mean_ia=mean_ia)
+    mixed_on = _run_mixed_slo(bm, gcfg, preempt=True, kv_pages=mx_pages,
+                              mean_ia=mean_ia)
+    # plain raises, not asserts: the acceptance gates must survive python -O
+    if mixed_off.pop("outputs") != mixed_on.pop("outputs"):
+        raise RuntimeError(
+            "preemption changed greedy outputs (spill/resume must be "
+            "bit-identical to an uninterrupted replay)")
+    if mixed_on["preemptions"] < 1:
+        raise RuntimeError(
+            "mixed_slo preemption run never preempted — the pool pressure "
+            "no longer forces a spill, the section measures nothing")
+    mixed_slo = {
+        "no_preemption": mixed_off,
+        "preemption": mixed_on,
+        "outputs_bit_identical": True,
+        "interactive_p95_gain": mixed_off["interactive_p95"]
+        / max(mixed_on["interactive_p95"], 1e-9),
+    }
     # duplicate-prefix burst: sharing off vs on at EQUAL pool bytes
     dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
     dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
@@ -644,9 +764,9 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
     }
     return {"lockstep": lock, "stream": stream, "paged": paged,
             "early_advance": early_advance, "feature_cache": feature_cache,
-            "suffix_window": suffix_window, "dup_prefix": dup,
-            "prefix_persist": prefix_persist, "kv": kv_report,
-            "mean_interarrival_s": mean_ia}
+            "suffix_window": suffix_window, "mixed_slo": mixed_slo,
+            "dup_prefix": dup, "prefix_persist": prefix_persist,
+            "kv": kv_report, "mean_interarrival_s": mean_ia}
 
 
 def _write_json(res: dict, path: str) -> None:
@@ -664,6 +784,8 @@ def _write_json(res: dict, path: str) -> None:
                    "sw_prompt_len": SW_PROMPT_LEN,
                    "sw_window_blocks": SW_WINDOW_BLOCKS,
                    "sw_pool_pages": SW_POOL_PAGES,
+                   "mixed_batch": MIXED_BATCH,
+                   "mixed_interactive": MIXED_INTERACTIVE,
                    "persist_pool_pages": PERSIST_POOL_PAGES},
         **res,
     }
@@ -730,6 +852,17 @@ def run(rows: list) -> None:
         f"deferred={sw['windowed']['pages_deferred']} "
         f"stalls={sw['windowed']['window_stalls']} "
         f"agreement={sw['greedy_agreement']:.3f} at equal pool bytes",
+    ))
+    mx = res["mixed_slo"]
+    rows.append((
+        "serving/mixed_slo", dt * 1e6 / 4,
+        f"interactive_p95={mx['no_preemption']['interactive_p95']:.2f}->"
+        f"{mx['preemption']['interactive_p95']:.2f}s "
+        f"({mx['interactive_p95_gain']:.2f}x) "
+        f"preemptions={mx['preemption']['preemptions']} "
+        f"pages_spilled={mx['preemption']['pages_spilled']} "
+        f"resume_p50={mx['preemption']['resume_p50']:.2f}s at equal pool "
+        f"bytes, outputs bit-identical",
     ))
     dup = res["dup_prefix"]
     rows.append((
@@ -811,6 +944,15 @@ def main() -> None:
           f"{sw['windowed']['pages_deferred']} pages deferred, "
           f"{sw['windowed']['window_stalls']} stalls (resumed, never killed), "
           f"greedy agreement {sw['greedy_agreement']:.3f}")
+    mx = res["mixed_slo"]
+    print(f"mixed-SLO ({MIXED_BATCH} batch jobs + {MIXED_INTERACTIVE} "
+          f"interactive, equal pool bytes): interactive p95 "
+          f"{mx['no_preemption']['interactive_p95']:.2f} -> "
+          f"{mx['preemption']['interactive_p95']:.2f}s "
+          f"({mx['interactive_p95_gain']:.2f}x), "
+          f"{mx['preemption']['preemptions']} preemptions, "
+          f"{mx['preemption']['pages_spilled']} pages spilled, resume p50 "
+          f"{mx['preemption']['resume_p50']:.2f}s, outputs bit-identical")
     dup = res["dup_prefix"]
     print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal pool "
           f"bytes): admitted concurrency "

@@ -156,6 +156,12 @@ class EngineState(NamedTuple):
     conf_full: Optional[jax.Array] = None     # [B, T] last-observed confidence
     cache_refreshed: Optional[jax.Array] = None  # [B] cumulative tokens refreshed
     cache_eligible: Optional[jax.Array] = None   # [B] cumulative eligible tokens
+    # poison detector plane: sticky per-row flag set the moment a step
+    # produces any non-finite confidence/hidden/feature value for an active
+    # row.  The scheduler quarantines flagged rows host-side (typed
+    # PoisonedRequest, slot reset, pages scrubbed + freed) and clears the
+    # flag.  None only for hand-built states (offline paths never read it).
+    poisoned: Optional[jax.Array] = None      # [B] bool
 
 
 def _row_scatter(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -228,6 +234,10 @@ class DiffusionEngine:
         # donated pool: the fork updates pages in place instead of copying
         # the whole pool (callers drop the pre-fork state immediately)
         self._jit_fork_kv = jax.jit(self._fork_kv_pools, donate_argnums=(0,))
+        # preemption/quarantine page ops share the fork's donation contract
+        self._jit_restore_kv = jax.jit(self._restore_kv_pools,
+                                       donate_argnums=(0,))
+        self._jit_scrub_kv = jax.jit(self._scrub_kv_pools, donate_argnums=(0,))
         self.step_trace_count = 0   # incremented per trace of _engine_step
 
         self.mask_id = self.cfg.vocab_size          # first padded-vocab slot
@@ -625,6 +635,7 @@ class DiffusionEngine:
             feat=bst.feat, conf_full=bst.conf_full,
             cache_refreshed=jnp.zeros((batch,), jnp.int32),
             cache_eligible=jnp.zeros((batch,), jnp.int32),
+            poisoned=jnp.zeros((batch,), bool),
         )
 
     # ------------------------------------------------------------------
@@ -658,6 +669,84 @@ class DiffusionEngine:
         caches = dict(state.caches)
         caches["kv"] = self._jit_fork_kv(
             state.caches["kv"], jnp.asarray(src), jnp.asarray(dst))
+        return state._replace(caches=caches)
+
+    # ------------------------------------------------------------------
+    # preemption spill/resume + quarantine page ops (failure handling,
+    # docs/ARCHITECTURE.md §5a)
+    # ------------------------------------------------------------------
+    def _restore_kv_pools(self, kv_caches, pages, data):
+        return jax.tree_util.tree_map(
+            lambda pool, d: pool.at[:, pages].set(d.astype(pool.dtype)),
+            kv_caches, data)
+
+    def _scrub_kv_pools(self, kv_caches, pages):
+        return jax.tree_util.tree_map(
+            lambda pool: pool.at[:, pages].set(
+                jnp.zeros((), pool.dtype)), kv_caches)
+
+    def _pad_pages(self, pages) -> np.ndarray:
+        """Pad a physical-page list to a multiple of 8 with garbage-page
+        (0) no-ops so the jitted scatter programs stay shape-stable —
+        exactly the ``fork_pages`` convention."""
+        pages = np.asarray(pages, np.int32).ravel()
+        pad = -(-pages.size // 8) * 8 - pages.size
+        return np.concatenate([pages, np.zeros(pad, np.int32)])
+
+    def spill_pages(self, state: EngineState, pages):
+        """Gather the exact BYTES of physical pages ``pages`` from every
+        self-attention KV pool plane to host memory.
+
+        Returns a tree of numpy arrays matching the ``caches['kv']`` leaves
+        with axis 1 reduced to ``len(pages)`` (in the given order) — the
+        snapshot half of preemption.  Host-side and eager: the pool is not
+        modified, and the spilled pages can be released to the allocator
+        immediately after (nothing reads an unmapped page)."""
+        assert self.paged, "spill_pages is a paged-pool operation"
+        idx = jnp.asarray(np.asarray(pages, np.int32).ravel())
+        return jax.tree_util.tree_map(
+            lambda pool: np.asarray(pool[:, idx]), state.caches["kv"])
+
+    def restore_pages(self, state: EngineState, pages, data) -> EngineState:
+        """Scatter a ``spill_pages`` snapshot back into freshly allocated
+        physical pages ``pages`` (same order as the spill) — the resume
+        half of preemption.  The restored bytes must be exact: under
+        block-causal invariant-refresh exemption, settled positions are
+        never rewritten, so their K/V must already be final.  The page list
+        is padded to a multiple of 8 with garbage-page no-ops (zeros) and
+        the pool is donated, so callers must drop the pre-restore state."""
+        assert self.paged, "restore_pages is a paged-pool operation"
+        n = np.asarray(pages, np.int32).size
+        assert n > 0
+        pidx = self._pad_pages(pages)
+        pad = pidx.size - n
+
+        def pad_leaf(d):
+            d = np.asarray(d)
+            assert d.shape[1] == n, f"snapshot holds {d.shape[1]} pages, not {n}"
+            if pad == 0:
+                return d
+            z = np.zeros((d.shape[0], pad) + d.shape[2:], d.dtype)
+            return np.concatenate([d, z], axis=1)
+
+        caches = dict(state.caches)
+        caches["kv"] = self._jit_restore_kv(
+            state.caches["kv"], jnp.asarray(pidx),
+            jax.tree_util.tree_map(pad_leaf, data))
+        return state._replace(caches=caches)
+
+    def scrub_pages(self, state: EngineState, pages) -> EngineState:
+        """Zero physical pages in every KV pool plane (quarantine hygiene:
+        a poisoned row's non-finite K/V must not outlive the row, even
+        though the next owner's admission prefill rewrites the page before
+        reading it).  Donated pool — callers drop the pre-scrub state."""
+        assert self.paged, "scrub_pages is a paged-pool operation"
+        pages = np.asarray(pages, np.int32).ravel()
+        if pages.size == 0:
+            return state
+        caches = dict(state.caches)
+        caches["kv"] = self._jit_scrub_kv(
+            state.caches["kv"], jnp.asarray(self._pad_pages(pages)))
         return state._replace(caches=caches)
 
     def is_prompt_refresh(self, phase: int) -> bool:
@@ -843,6 +932,21 @@ class DiffusionEngine:
         stats = outs[6]
         st = self._apply_unmask(st, bs, *outs, active=state.active)
 
+        # per-row poison detector: any non-finite value in a row's merged
+        # confidence / indicator / feature planes marks the row.  The flag is
+        # sticky (ORed in) and only ever set for active rows — idle rows
+        # carry zeroed finite planes.  The scheduler retires flagged rows
+        # host-side (typed PoisonedRequest) and resets the flag, so one bad
+        # request cannot keep a slot or its pages hostage.
+        poisoned = state.poisoned
+        if poisoned is not None:
+            bad = ~jnp.all(jnp.isfinite(st.conf), axis=1)
+            for hh in st.hidden:
+                bad |= ~jnp.all(jnp.isfinite(hh), axis=(1, 2))
+            if st.feat is not None:
+                bad |= ~jnp.all(jnp.isfinite(st.feat), axis=(1, 2))
+            poisoned = poisoned | (bad & state.active)
+
         phase_used = state.phase
         phase = (phase_used + 1) % steps_pb
 
@@ -881,6 +985,7 @@ class DiffusionEngine:
             feat=st.feat, conf_full=st.conf_full,
             cache_refreshed=state.cache_refreshed + stats[:, 0],
             cache_eligible=state.cache_eligible + stats[:, 1],
+            poisoned=poisoned,
         )
 
     # ------------------------------------------------------------------

@@ -25,7 +25,7 @@ import numpy as np
 from repro import configs
 from repro.configs import GenerationConfig, default_skip_stages
 from repro.models import build_model
-from repro.runtime import BatchServer, Request, StreamScheduler
+from repro.runtime import BatchServer, ConfigError, Request, StreamScheduler
 
 
 def main() -> None:
@@ -90,6 +90,21 @@ def main() -> None:
                          "prompt + one active window, the rest grows "
                          "just-in-time as the window slides (requires "
                          "--paged and --window-blocks > 0)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="spread requests round-robin over this many "
+                         "admission classes (class k = priority k; higher "
+                         "admits first, stream runtime only)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request SLO budget from arrival; admission "
+                         "rejects a request with a typed DeadlineUnmeetable "
+                         "once wait + estimated service exceeds it "
+                         "(stream runtime only)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="priority preemption with host page spill/resume: "
+                         "a higher-class arrival may spill a lower-class "
+                         "resident's pages to host at its block boundary "
+                         "and resume it bit-identically later (requires "
+                         "--paged; docs/ARCHITECTURE.md §5a)")
     ap.add_argument("--block-causal", action="store_true",
                     help="causal-block attention mask: prompt K/V becomes a "
                          "pure function of the prompt, enabling the "
@@ -97,6 +112,34 @@ def main() -> None:
                          "--paged --prefix-sharing) and invariant-position "
                          "refresh skipping (docs/ARCHITECTURE.md §4b/4c)")
     args = ap.parse_args()
+
+    # fail fast on SLO/preemption misconfiguration, before any model build
+    # (the scheduler re-validates --preemption, but the batch runtime never
+    # reaches it, and a bad flag should not cost a params init)
+    if args.priority_classes < 1:
+        raise ConfigError(
+            f"--priority-classes must be >= 1, got {args.priority_classes}")
+    if args.deadline_s is not None and args.deadline_s <= 0:
+        raise ConfigError(
+            f"--deadline-s must be positive, got {args.deadline_s} "
+            "(a non-positive budget rejects every request at submit)")
+    if args.runtime == "batch" and (args.preemption
+                                    or args.priority_classes > 1
+                                    or args.deadline_s is not None):
+        raise ConfigError(
+            "--preemption/--priority-classes/--deadline-s need the stream "
+            "runtime: the lock-step batch server has no admission policy")
+    if args.preemption and not args.paged:
+        raise ConfigError("--preemption requires --paged: spilling moves "
+                          "pool pages, dense KV rows cannot be released")
+    if args.preemption and args.prefix_sharing:
+        raise ConfigError("--preemption is incompatible with "
+                          "--prefix-sharing: a spill releases pages other "
+                          "requests may still map")
+    if args.preemption and args.lazy_reserve:
+        raise ConfigError("--preemption is incompatible with "
+                          "--lazy-reserve: spill breaks the max-deficit "
+                          "liveness accounting")
 
     cfg = configs.get_config(args.arch)
     if not args.full:
@@ -131,7 +174,8 @@ def main() -> None:
                                  prefix_sharing=args.prefix_sharing,
                                  early_advance=args.early_advance,
                                  gather_refresh=args.gather_refresh,
-                                 lazy_reserve=args.lazy_reserve)
+                                 lazy_reserve=args.lazy_reserve,
+                                 preemption=args.preemption)
     else:
         server = BatchServer(model, params, gen, batch_size=args.batch,
                              prompt_len=args.prompt_len)
@@ -140,12 +184,16 @@ def main() -> None:
     if args.dup_prompts:
         dup_prompt = rng.integers(3, cfg.vocab_size,
                                   args.prompt_len).astype(np.int32)
-    for _ in range(args.requests):
+    for i in range(args.requests):
+        slo = dict(priority=i % args.priority_classes,
+                   deadline_s=args.deadline_s)
         if args.dup_prompts:
-            server.submit(Request(prompt=dup_prompt.copy()))
+            server.submit(Request(prompt=dup_prompt.copy(), **slo))
             continue
         plen = int(rng.integers(8, args.prompt_len + 1))
-        server.submit(Request(prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32)))
+        server.submit(Request(
+            prompt=rng.integers(3, cfg.vocab_size, plen).astype(np.int32),
+            **slo))
 
     done = server.drain()
     line = (f"served {len(done)} requests  runtime={args.runtime}  "
@@ -174,8 +222,18 @@ def main() -> None:
             if args.lazy_reserve:
                 line += (f"  pages_deferred={server.stats.pages_deferred}"
                          f"  window_stalls={server.stats.window_stalls}")
+        if args.preemption:
+            line += (f"  preemptions={server.stats.preemptions}"
+                     f"  pages_spilled={server.stats.pages_spilled}"
+                     f"  resume_p50={server.stats.resume_p50:.3f}s")
+        if args.deadline_s is not None:
+            line += f"  deadline_rejects={server.stats.deadline_rejects}"
+        if server.stats.poisoned_requests:
+            line += f"  poisoned_requests={server.stats.poisoned_requests}"
     print(line)
-    print("sample output:", done[0].output[:24].tolist())
+    ok = [r for r in done if r.output is not None]
+    if ok:
+        print("sample output:", ok[0].output[:24].tolist())
 
 
 if __name__ == "__main__":

@@ -13,7 +13,9 @@ _ids = itertools.count()
 StreamCallback = Callable[["Request", int, np.ndarray], None]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)           # identity equality: value eq would
+                                           # compare ndarray fields elementwise
+                                           # (queue removal, membership tests)
 class Request:
     prompt: np.ndarray                     # [P] int32 token ids
     enc_embeds: Optional[np.ndarray] = None
@@ -30,6 +32,17 @@ class Request:
                                            # (paged + max_new_tokens: replay
                                            # with the truncated gen_length —
                                            # see StreamScheduler._pages_needed)
+    priority: int = 0                      # admission class: higher admits
+                                           # first (FIFO within a class) and
+                                           # may preempt lower classes when
+                                           # the scheduler runs with
+                                           # preemption=True
+    deadline_s: Optional[float] = None     # SLO budget measured from
+                                           # arrival; admission rejects the
+                                           # request with a typed
+                                           # DeadlineUnmeetable once
+                                           # wait + estimated service
+                                           # exceeds it
     max_blocks: Optional[int] = None       # HARD cap on generated blocks,
                                            # distinct from the soft
                                            # max_new_tokens/req_blocks hint:
@@ -41,6 +54,10 @@ class Request:
                                            # ROADMAP item 5)
     # filled by the server / scheduler
     output: Optional[np.ndarray] = None
+    error: Optional[Exception] = None      # typed retirement verdict
+                                           # (DeadlineUnmeetable /
+                                           # PoisonedRequest); None on
+                                           # successful completion
     latency_s: float = 0.0                 # finish - arrival (queueing incl.)
     arrival_s: float = 0.0                 # set at submit()
     admit_s: float = 0.0                   # set when a slot is assigned

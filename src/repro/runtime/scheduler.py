@@ -51,6 +51,22 @@ all control flow host-side:
   where they are immediately re-admittable, instead of leaving them
   masked-but-resident.
 
+* **fault tolerance under pressure** (docs/ARCHITECTURE.md §5a): admission
+  is SLO-aware — higher ``Request.priority`` classes admit first (FIFO
+  within a class) and a request that cannot meet its ``deadline_s`` given
+  the measured per-step cost is rejected with a typed
+  ``DeadlineUnmeetable`` verdict instead of silently queueing.  With
+  ``preemption=True`` (paged only) a page-starved higher class may *spill*
+  the lowest-priority resident: its mapped page BYTES are gathered to host
+  memory, its per-row counters parked, its pages freed — and it later
+  re-admits by scattering the pages back, resuming at its block boundary
+  bit-identically to an uninterrupted run.  A per-row non-finite detector
+  quarantines poisoned rows (typed ``PoisonedRequest``, slot reset, private
+  pages scrubbed) so one bad request can never corrupt co-resident,
+  cohort-shared, or persistent-store pages.  ``drain()`` carries a
+  watchdog: zero forward progress (or a blown step/wall budget) raises a
+  typed ``DrainStalled`` naming the stuck slots instead of hanging CI.
+
 ``drain()`` keeps the offline contract of ``BatchServer`` (submit everything,
 call drain, read ``Request.output``), so existing callers keep working.
 docs/ARCHITECTURE.md documents the full memory-manager contract.
@@ -70,6 +86,13 @@ from repro.configs.base import GenerationConfig
 from repro.core.engine import DiffusionEngine
 from repro.core.schedule import full_refresh_pred, invariant_limit
 from repro.models.model import Model
+from repro.runtime.errors import (
+    ConfigError,
+    DeadlineUnmeetable,
+    DrainStalled,
+    LedgerError,
+    PoisonedRequest,
+)
 from repro.runtime.request import Request, StreamCallback
 
 
@@ -119,6 +142,15 @@ class SchedulerStats:
     prefix_hits: int = 0                 # admissions served from the store
     prefix_evictions: int = 0            # LRU store entries dropped
     invariant_tokens_skipped: int = 0    # refresh rewrites skipped as invariant
+    # failure handling (ARCHITECTURE §5a; all 0 / empty when the pressure
+    # features are off).  A preemption spills ONE victim request (all its
+    # mapped pages); resume_waits measures spill -> re-admission.
+    preemptions: int = 0                 # victim requests spilled to host
+    pages_spilled: int = 0               # pages gathered to host by spills
+    resume_waits: list = dataclasses.field(default_factory=list)
+                                         # per-resume parked time (spill->resume)
+    deadline_rejects: int = 0            # typed DeadlineUnmeetable verdicts
+    poisoned_requests: int = 0           # rows quarantined by the NaN detector
 
     @property
     def goodput(self) -> float:
@@ -145,6 +177,13 @@ class SchedulerStats:
             return 0.0
         return float(np.percentile(np.asarray(self.refresh_event_tokens), 50))
 
+    @property
+    def resume_p50(self) -> float:
+        """Median seconds a preempted request spent parked on the host."""
+        if not self.resume_waits:
+            return 0.0
+        return float(np.percentile(np.asarray(self.resume_waits), 50))
+
     def gauges(self) -> dict:
         """Point-in-time gauge snapshot (the monitoring-surface dict)."""
         return {
@@ -164,6 +203,11 @@ class SchedulerStats:
             "prefix_hits": self.prefix_hits,
             "prefix_evictions": self.prefix_evictions,
             "invariant_tokens_skipped": self.invariant_tokens_skipped,
+            "preemptions": self.preemptions,
+            "pages_spilled": self.pages_spilled,
+            "resume_p50": self.resume_p50,
+            "deadline_rejects": self.deadline_rejects,
+            "poisoned_requests": self.poisoned_requests,
         }
 
     # BatchServer.stats compatibility
@@ -289,10 +333,24 @@ class PageAllocator:
         self.pages_allocated += n
         return pages
 
+    def _check_live(self, page: int, op: str) -> None:
+        """Typed ledger guards (ARCHITECTURE invariant 13): operating on a
+        page with no live claim is always bookkeeping corruption, never a
+        load condition, so it raises ``LedgerError`` instead of asserting —
+        the guard survives ``python -O`` and callers can pattern-match."""
+        rc = self._refcount[page]
+        if rc < 0:
+            raise LedgerError(
+                f"negative refcount {rc} on page {page} (ledger corrupted)")
+        if rc == 0:
+            verb = ("double release of" if op == "release"
+                    else "share-after-free on")
+            raise LedgerError(f"{verb} page {page}: no live claim")
+
     def share(self, pages: list[int]) -> None:
         """Add one read-only claim per page (prefix sharing)."""
         for p in pages:
-            assert self._refcount[p] > 0, f"sharing unallocated page {p}"
+            self._check_live(p, "share")
             self._refcount[p] += 1
 
     def release(self, pages: list[int]) -> int:
@@ -302,7 +360,7 @@ class PageAllocator:
         resident."""
         freed = 0
         for p in pages:
-            assert self._refcount[p] > 0, f"double free of page {p}"
+            self._check_live(p, "release")
             self._refcount[p] -= 1
             if self._refcount[p] == 0:
                 self._free.append(p)
@@ -337,6 +395,44 @@ class PageAllocator:
                 self.release([pg for _, pg in page_map])
         self._prefix.clear()
 
+    def drop_prefix_entries(self, pages: set) -> int:
+        """Persistent mode: drop every store entry mapping any of ``pages``
+        (quarantine hygiene — a poisoned row's pages must not stay reachable
+        through the cross-request store).  Returns entries dropped."""
+        if not self.persistent:
+            return 0
+        dropped = 0
+        for key in list(self._prefix):
+            _, page_map = self._prefix[key]
+            if any(pg in pages for _, pg in page_map):
+                del self._prefix[key]
+                self.release([pg for _, pg in page_map])
+                dropped += 1
+        return dropped
+
+
+@dataclasses.dataclass(eq=False)            # identity equality (ndarray fields)
+class _SpilledRequest:
+    """A preempted request parked on the host (ARCHITECTURE §5a).
+
+    Captured at the victim's block boundary (``phase == 0``): the next step
+    of both the parked and an uninterrupted run would be a FULL refresh,
+    which rebuilds conf/pred/hidden/feat from tokens + KV without reading
+    their carried values — so only the fields below need to survive.  The
+    KV page BYTES must restore exactly (block-causal invariant-refresh
+    exemption never rewrites settled positions), hence ``kv_data``.
+    A spilled request holds ZERO allocator claims while parked.
+    """
+    req: Request
+    seq: int                 # original submission order (class-FIFO resume)
+    n_blocks: int            # admission-time block budget
+    vps: list                # mapped virtual pages at spill time, in order
+    kv_data: object          # engine.spill_pages host tree (one axis-1 slice
+                             # per entry of vps, same order)
+    row: dict                # per-row counters + token/kv_valid/feat planes
+    streamed: int            # blocks already streamed before the spill
+    spill_s: float           # clock at spill (resume_waits gauge)
+
 
 class StreamScheduler:
     """Slot-recycling streaming scheduler (continuous batching)."""
@@ -363,6 +459,11 @@ class StreamScheduler:
                                             # prompt + active-window pages only
                                             # and grow the mapping just-in-time
                                             # as each row's bs advances
+        preemption: bool = False,           # page pressure may spill the
+                                            # lowest-priority resident to host
+                                            # memory (paged only; resumes
+                                            # bit-identically at its block
+                                            # boundary)
         **engine_kw,
     ):
         assert gen.gen_length % gen.block_length == 0
@@ -390,6 +491,27 @@ class StreamScheduler:
         # up-front need while growth deficits (all-private far suffix) are
         # untouched (ARCHITECTURE §1c).
         self.lazy_reserve = lazy_reserve
+        # preemption spill/resume needs every victim page to be private
+        # (refcount 1, fully owned by the victim): a spilled page is
+        # RELEASED, which under sharing would yank pages out from under
+        # co-resident sharers, and under lazy reservation would break the
+        # max-deficit liveness accounting.  Typed, upfront rejection.
+        if preemption:
+            if not paged:
+                raise ConfigError(
+                    "preemption=True requires paged=True: spilling moves "
+                    "pool pages, dense KV rows cannot be released")
+            if prefix_sharing:
+                raise ConfigError(
+                    "preemption=True is incompatible with prefix_sharing: "
+                    "a spill releases the victim's pages, which sharing "
+                    "may have mapped into co-resident slots")
+            if lazy_reserve:
+                raise ConfigError(
+                    "preemption=True is incompatible with lazy_reserve: "
+                    "spills would invalidate the max-deficit window-growth "
+                    "liveness accounting")
+        self.preemption = preemption
         self.early_advance = early_advance
         engine_kw.setdefault("early_advance", early_advance)
         # persistent cross-request prefix cache: sound exactly when the mask
@@ -433,6 +555,19 @@ class StreamScheduler:
         # slots paused by a denied window growth: inactive on device but NOT
         # retired — _finish_cycle skips them, _grow_windows resumes them
         self.stalled: set[int] = set()
+        # preempted requests parked on the host (zero allocator claims);
+        # re-admission competes with the queue by (priority, submission seq)
+        self._spilled: list[_SpilledRequest] = []
+        self._submit_seq = 0
+        self._seq: dict[int, int] = {}      # request_id -> submission seq
+        # measured per-engine-step wall cost (EWMA) — the analytic term of
+        # the deadline-admission estimate; None until the first step
+        self._step_ewma: Optional[float] = None
+        # zero-progress watchdog bound for drain(): generous — several full
+        # offline passes' worth of iterations — so it can only ever trip on
+        # a real livelock, never on a slow-but-progressing pool
+        self._drain_patience = max(
+            64, 8 * gen.resolved_steps() * (self.n_blocks + 2))
         # sharing cohorts: {"owner": slot, "slots": {slot: [(vp, page)]},
         # "reserve": {slot: [pages]}, "born": step} — see _admit/_cow_fork
         self.cohorts: list[dict] = []
@@ -470,7 +605,49 @@ class StreamScheduler:
             )
         req.arrival_s = self.clock()
         self.stats.submitted += 1
+        self._seq[req.request_id] = self._submit_seq
+        self._submit_seq += 1
+        if req.deadline_s is not None:
+            # submit-time triage: a nonpositive budget, or an estimated
+            # service time that already exceeds it, can only ever miss
+            est = self._estimate_service_s(self._req_blocks(req))
+            if req.deadline_s <= 0 or est > req.deadline_s:
+                self._reject_deadline(req, 0.0, est)
+                return
         self.queue.append(req)
+
+    def _req_blocks(self, req: Request) -> int:
+        """Admission-time block budget (the soft hint capped by the hard
+        ``max_blocks``) — the quantity the page and deadline math size by."""
+        n_blocks = self.n_blocks
+        if req.max_new_tokens is not None:
+            # whole blocks only: the block loop is the progress quantum
+            n_blocks = min(
+                max(-(-req.max_new_tokens // self.gen.block_length), 1),
+                self.n_blocks)
+        if req.max_blocks is not None:
+            # HARD cap, honoured in every mode: under lazy reservation it
+            # bounds the extent the window may ever grow to
+            n_blocks = min(n_blocks, max(req.max_blocks, 1))
+        return n_blocks
+
+    def _estimate_service_s(self, n_blocks: int) -> float:
+        """Analytic service estimate: blocks x steps-per-block x the
+        measured per-step wall EWMA.  0.0 until the first step has been
+        timed — cold admission never rejects on a guess."""
+        if self._step_ewma is None:
+            return 0.0
+        return n_blocks * self.gen.resolved_steps() * self._step_ewma
+
+    def _reject_deadline(self, req: Request, waited: float,
+                         est: float) -> None:
+        now = self.clock()
+        req.error = DeadlineUnmeetable(
+            req.request_id, req.deadline_s, waited, est)
+        req.finish_s = now
+        req.latency_s = now - req.arrival_s
+        self.stats.deadline_rejects += 1
+        self._completed.append(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -519,7 +696,9 @@ class StreamScheduler:
         their prompt K/V are never content-equal (bidirectional attention).
         """
         free = self._free_slots()
-        if not free or not self.queue:
+        if not (self.queue or self._spilled):
+            return
+        if not free and not self.preemption:
             return
         st = self.state
         t_total = self.prompt_len + self.gen.gen_length
@@ -527,16 +706,51 @@ class StreamScheduler:
         lb = self.gen.block_length
         sampled = self.gen.temperature > 0
         cycle_cohorts: dict = {}        # share key -> cohort (this cycle only)
-        while free and self.queue:
-            req = self.queue[0]
-            n_blocks = self.n_blocks
-            if req.max_new_tokens is not None:
-                # whole blocks only: the block loop is the progress quantum
-                n_blocks = min(max(-(-req.max_new_tokens // lb), 1), self.n_blocks)
-            if req.max_blocks is not None:
-                # HARD cap, honoured in every mode: under lazy reservation it
-                # bounds the extent the window may ever grow to
-                n_blocks = min(n_blocks, max(req.max_blocks, 1))
+        while self.queue or self._spilled:
+            # merged candidate order: highest priority class first, FIFO
+            # (submission order) within a class.  Spilled requests compete
+            # under the same key, so a parked victim regains its original
+            # place the moment capacity returns; with every priority at the
+            # default 0 this degenerates to the plain FIFO queue.
+            cands = [(-r.priority, self._seq[r.request_id], r)
+                     for r in self.queue]
+            cands += [(-rec.req.priority, rec.seq, rec)
+                      for rec in self._spilled]
+            cands.sort(key=lambda c: (c[0], c[1]))
+            top = cands[0][2]
+            if not free:
+                # slot-starved: spill one lower-class victim to free its
+                # slot (its pages return with it) — preemption covers the
+                # slot dimension, not just the page pool
+                st, ok = self._try_preempt(st, 0, -cands[0][0], free)
+                if not ok or not free:
+                    break
+            if isinstance(top, _SpilledRequest):
+                rec = top
+                got = self.allocator.alloc(len(rec.vps))
+                if got is None:
+                    st, ok = self._try_preempt(
+                        st, len(rec.vps), rec.req.priority, free)
+                    if ok:
+                        got = self.allocator.alloc(len(rec.vps))
+                if got is None:
+                    break               # page-gated: retry next cycle
+                self._spilled.remove(rec)
+                slot = free.pop(0)
+                st = self._resume_into(st, slot, rec, got, now)
+                continue
+            req = top
+            if req.deadline_s is not None:
+                # SLO admission: once wait + estimated service exceeds the
+                # budget the request can only miss — reject NOW with a
+                # typed verdict instead of burning a slot and pool pages
+                waited = now - req.arrival_s
+                est = self._estimate_service_s(self._req_blocks(req))
+                if waited + est > req.deadline_s:
+                    self.queue.remove(req)
+                    self._reject_deadline(req, waited, est)
+                    continue
+            n_blocks = self._req_blocks(req)
             p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
             pages: list[int] = []
             shared_map: list[tuple[int, int]] = []   # [(vp, physical page)]
@@ -623,11 +837,17 @@ class StreamScheduler:
                                 deficit_new, resident_deficit):
                             break               # reserve-gated: retry later
                     got = self.allocator.alloc(need)
+                    if got is None and self.preemption:
+                        # page-starved: spill lower classes at their block
+                        # boundaries until the pool covers this request
+                        st, ok = self._try_preempt(st, need, req.priority, free)
+                        if ok:
+                            got = self.allocator.alloc(need)
                     if got is None:
                         break                   # page-gated: retry next cycle
                     pages = got
             slot = free.pop(0)
-            self.queue.popleft()
+            self.queue.remove(req)
             row = np.full((t_total,), self.engine.mask_id, np.int32)
             row[: self.prompt_len] = self.pad_id
             row[self.prompt_len - len(p): self.prompt_len] = p
@@ -726,10 +946,164 @@ class StreamScheduler:
             sum(r is not None for r in self.slot_req))
 
     # ------------------------------------------------------------------
+    # priority preemption: host-memory spill / resume (ARCHITECTURE §5a)
+    # ------------------------------------------------------------------
+    def _try_preempt(self, st, need: int, priority: int,
+                     free: list) -> tuple:
+        """Spill lowest-priority residents until the free list covers
+        ``need`` pages (``need == 0``: free exactly one SLOT).  Returns
+        ``(st, ok)``.
+
+        Victim policy: only residents of a STRICTLY lower class, taken
+        lowest class first and youngest first within a class — the oldest
+        resident of any class is spilled last, preserving the no-starvation
+        shape of the lazy-reserve liveness argument.  A victim is eligible
+        only at its block boundary (``phase == 0``): the immediately
+        following step of an uninterrupted run would be the block-entry
+        refresh, which rebuilds conf/pred/hidden from tokens + KV — so the
+        snapshot below is exactly sufficient for a bit-identical resume.
+        Mid-block residents are simply not eligible this cycle; the caller
+        retries once they wrap."""
+        if not self.preemption or self.allocator is None:
+            return st, False
+        phases = np.asarray(st.phase)
+        victims = [s for s, r in enumerate(self.slot_req)
+                   if r is not None and r.priority < priority
+                   and s not in self.stalled and int(phases[s]) == 0]
+        if not victims:
+            return st, False
+        victims.sort(key=lambda s: (self.slot_req[s].priority,
+                                    -self.slot_order[s]))
+        if need > 0:
+            reachable = self.allocator.free_pages + sum(
+                len(self.slot_pages[s]) for s in victims)
+            if reachable < need:
+                return st, False        # even spilling every victim won't fit
+        now = self.clock()
+        spilled_any = False
+        for s in victims:
+            if need > 0 and self.allocator.free_pages >= need:
+                break
+            if need == 0 and spilled_any:
+                break
+            st = self._spill_slot(st, s, now)
+            free.append(s)
+            spilled_any = True
+        ok = self.allocator.free_pages >= need if need > 0 else spilled_any
+        return st, ok
+
+    def _spill_slot(self, st, slot: int, now: float):
+        """Park a resident on the host: gather its mapped page BYTES, copy
+        its per-row planes/counters, release every allocator claim, and
+        deactivate the row.  A parked request holds ZERO pool pages — the
+        ledger invariant needs no new term for it."""
+        req = self.slot_req[slot]
+        bt = np.asarray(st.block_tables)
+        vps = [int(v) for v in np.nonzero(bt[slot] >= 0)[0]]
+        pages = [int(bt[slot, vp]) for vp in vps]
+        kv_data = self.engine.spill_pages(st, pages)
+        row = {
+            "tokens": np.asarray(st.tokens[slot]).copy(),
+            "kv_valid": np.asarray(st.kv_valid[slot]).copy(),
+            "bs": int(st.bs[slot]),
+            "blocks_left": int(st.blocks_left[slot]),
+            "iters": int(st.iters[slot]),
+            "prompt_start": int(st.prompt_start[slot]),
+            "sample_seed": int(st.sample_seeds[slot]),
+            "extent": self.slot_extent[slot],
+            "frontier": self.slot_frontier[slot],
+        }
+        if st.feat is not None:
+            # the adaptive cache's probe plane and full-confidence plane are
+            # carried ACROSS refreshes (a refresh scatters only its block's
+            # columns), so unlike conf/pred/hidden they must round-trip
+            row["feat"] = np.asarray(st.feat[slot]).copy()
+            row["conf_full"] = np.asarray(st.conf_full[slot]).copy()
+            row["cache_refreshed"] = int(st.cache_refreshed[slot])
+            row["cache_eligible"] = int(st.cache_eligible[slot])
+        self._spilled.append(_SpilledRequest(
+            req=req, seq=self._seq[req.request_id],
+            n_blocks=self.slot_blocks[slot], vps=vps, kv_data=kv_data,
+            row=row, streamed=self.slot_streamed[slot], spill_s=now))
+        self.allocator.release(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        st = st._replace(
+            active=st.active.at[slot].set(False),
+            block_tables=st.block_tables.at[slot].set(-1))
+        self.slot_req[slot] = None
+        self.stats.preemptions += 1
+        self.stats.pages_spilled += len(pages)
+        self.stats.pages_in_use = self.allocator.used_pages
+        return st
+
+    def _resume_into(self, st, slot: int, rec: _SpilledRequest,
+                     got: list, now: float):
+        """Re-admit a parked request: scatter its page bytes onto freshly
+        allocated pool pages, rebuild its block-table row at the SAME
+        virtual pages (physical ids may differ — the row only ever reads
+        pages through its own table), and restore every per-row field the
+        block-entry refresh reads.  ``phase`` pins to 0 and ``iters``
+        restores exactly, so the draw-key numbering
+        (fold_in(seed) + lifetime iteration) continues precisely where the
+        uninterrupted run would be — greedy AND sampled resumes are
+        bit-identical."""
+        st = self.engine.restore_pages(st, got, rec.kv_data)
+        row = rec.row
+        bt_row = np.full(
+            ((self.prompt_len + self.gen.gen_length) // self.page_size,),
+            -1, np.int32)
+        bt_row[rec.vps] = got
+        st = st._replace(
+            tokens=st.tokens.at[slot].set(jnp.asarray(row["tokens"])),
+            kv_valid=st.kv_valid.at[slot].set(jnp.asarray(row["kv_valid"])),
+            bs=st.bs.at[slot].set(row["bs"]),
+            blocks_left=st.blocks_left.at[slot].set(row["blocks_left"]),
+            phase=st.phase.at[slot].set(0),
+            iters=st.iters.at[slot].set(row["iters"]),
+            active=st.active.at[slot].set(True),
+            prompt_start=st.prompt_start.at[slot].set(row["prompt_start"]),
+            sample_seeds=st.sample_seeds.at[slot].set(row["sample_seed"]),
+            block_tables=st.block_tables.at[slot].set(jnp.asarray(bt_row)),
+        )
+        if st.poisoned is not None:
+            st = st._replace(poisoned=st.poisoned.at[slot].set(False))
+        if st.feat is not None:
+            st = st._replace(
+                feat=st.feat.at[slot].set(jnp.asarray(row["feat"])),
+                conf_full=st.conf_full.at[slot].set(
+                    jnp.asarray(row["conf_full"])),
+                cache_refreshed=st.cache_refreshed.at[slot].set(
+                    row["cache_refreshed"]),
+                cache_eligible=st.cache_eligible.at[slot].set(
+                    row["cache_eligible"]),
+            )
+        self.slot_req[slot] = rec.req
+        self.slot_blocks[slot] = rec.n_blocks
+        self.slot_streamed[slot] = rec.streamed
+        self.slot_pages[slot] = list(got)
+        self.slot_extent[slot] = row["extent"]
+        self.slot_frontier[slot] = row["frontier"]
+        self.slot_order[slot] = self._admit_seq
+        self._admit_seq += 1
+        if self.expects_enc:
+            # cross/ssm caches are rebuilt wholesale by the refresh, but it
+            # reads the encoder plane — re-encode into the resumed slot
+            enc = self.model.encode(
+                self.params, jax.numpy.asarray(rec.req.enc_embeds)[None],
+                self.engine.attn_impl)
+            self._enc_out = self._enc_out.at[slot].set(enc[0])
+        self.stats.resume_waits.append(now - rec.spill_s)
+        self.stats.pages_in_use = self.allocator.used_pages
+        self.stats.peak_pages_in_use = max(
+            self.stats.peak_pages_in_use, self.stats.pages_in_use)
+        return st
+
+    # ------------------------------------------------------------------
     # the serving loop
     # ------------------------------------------------------------------
     def has_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slot_req)
+        return bool(self.queue) or bool(self._spilled) \
+            or any(r is not None for r in self.slot_req)
 
     def step(self) -> bool:
         """One engine iteration (+ bookkeeping).  Returns False and does
@@ -742,6 +1116,16 @@ class StreamScheduler:
         behavior reduces exactly to the old block-aligned scheduler."""
         t0 = self.clock()           # admission work (incl. encode) is wall time
         phases = np.asarray(self.state.phase)
+        if (self.queue or self._spilled) and bool(phases.any()) \
+                and not any(r is not None for r in self.slot_req):
+            # quarantine (unlike normal retirement) can retire the LAST
+            # resident mid-block, freezing every phase counter off the
+            # boundary — with nobody resident the counters are meaningless,
+            # but the aligned admission gate reads them, so re-zero or the
+            # gate never reopens and queued work starves a free pool
+            self.state = self.state._replace(
+                phase=jnp.zeros_like(self.state.phase))
+            phases = np.asarray(self.state.phase)
         if self.early_advance or bool((phases == 0).all()):
             self._admit()
             phases = np.asarray(self.state.phase)
@@ -784,13 +1168,23 @@ class StreamScheduler:
         self.state = self.engine.step(self.params, self.state, self._enc_out)
         jax.block_until_ready(self.state.tokens)
         self._step_count += 1
-        self.stats.wall_s += self.clock() - t0
+        dt = self.clock() - t0
+        self.stats.wall_s += dt
+        # per-step wall EWMA: the measured-cost term of deadline admission
+        self._step_ewma = dt if self._step_ewma is None \
+            else 0.8 * self._step_ewma + 0.2 * dt
         if track_cache:
             d_r = np.asarray(self.state.cache_refreshed) - pre_r
             d_e = np.asarray(self.state.cache_eligible) - pre_e
             self.stats.cache_refreshed_total += int(d_r.sum())
             self.stats.cache_eligible_total += int(d_e.sum())
             self.stats.refresh_event_tokens.extend(d_r[d_e > 0].tolist())
+        if self.state.poisoned is not None:
+            # quarantine BEFORE reclaim/retirement bookkeeping: a poisoned
+            # row must never reach the streaming or page-eviction paths
+            pois = np.asarray(self.state.poisoned)
+            if pois.any():
+                self._quarantine([int(s) for s in np.nonzero(pois)[0]])
         if self.paged and self.gen.sparse_attention and refresh_rows.any():
             self._reclaim_dead_pages(refresh_rows)
         if self.early_advance:
@@ -1063,10 +1457,134 @@ class StreamScheduler:
                     self.stats.pages_in_use = self.allocator.used_pages
                     self.stats.shared_mappings = self.allocator.shared_mappings
 
-    def drain(self) -> list[Request]:
-        """Offline mode: run until queue and slots are empty (BatchServer
-        compatible — submit everything, drain, read ``Request.output``)."""
+    # ------------------------------------------------------------------
+    # poison-slot quarantine (ARCHITECTURE §5b)
+    # ------------------------------------------------------------------
+    def _quarantine(self, slots: list) -> None:
+        """Retire rows the engine's non-finite detector flagged: typed
+        ``PoisonedRequest`` verdict, slot reset, pages freed.  One bad
+        request never corrupts anyone else:
+
+        * co-resident slots never read the row (dense attention never
+          crosses rows; paged attention reads only pages in the reader's
+          own block table);
+        * pages this slot owned EXCLUSIVELY (refcount 1) are zero-scrubbed
+          on device before returning to the free list, so a later occupant
+          can never observe the non-finite bytes;
+        * a refcount>1 page is left intact — it is shared read-only with a
+          live cohort.  Greedy cohorts compute identical bytes, so they go
+          non-finite in lock-step and this same sweep quarantines every
+          member (dropping all claims); sampled cohorts CoW-forked before
+          any post-divergence write, so a shared page a survivor still maps
+          was never written by the poisoned trajectory;
+        * any persistent prefix-store entry touching the row's pages is
+          dropped, so the cross-request cache cannot re-serve them.
+        """
+        st = self.state
+        now = self.clock()
+        mask_id = self.engine.mask_id
+        for slot in slots:
+            req = self.slot_req[slot]
+            if req is not None:
+                req.error = PoisonedRequest(
+                    req.request_id, slot, self._step_count)
+                req.finish_s = now
+                req.latency_s = now - req.arrival_s
+                self.stats.poisoned_requests += 1
+                self._completed.append(req)
+                self.slot_req[slot] = None
+                self.stalled.discard(slot)
+            if self.allocator is not None and self.slot_pages[slot]:
+                pages = self.slot_pages[slot]
+                priv = [pg for pg in pages
+                        if self.allocator.refcount(pg) == 1]
+                if priv:
+                    st = self.engine.scrub_pages(st, priv)
+                self.allocator.drop_prefix_entries(set(pages))
+                self.allocator.release(pages)
+                self.slot_pages[slot] = []
+                st = st._replace(
+                    block_tables=st.block_tables.at[slot].set(-1))
+                for cohort in list(self.cohorts):
+                    if slot in cohort["slots"]:
+                        del cohort["slots"][slot]
+                        reserve = cohort["reserve"].pop(slot, [])
+                        if reserve:
+                            self.allocator.release(reserve)
+                        if len(cohort["slots"]) <= 1:
+                            self._dissolve_cohort(cohort)
+            # reset the device row: admission's fresh prefill rewrites
+            # everything anyway (iters==0 exempts nothing), so this is
+            # belt-and-suspenders — but it guarantees no non-finite value
+            # survives in any plane a future policy might carry over
+            st = st._replace(
+                tokens=st.tokens.at[slot].set(mask_id),
+                conf=st.conf.at[slot].set(0.0),
+                pred=st.pred.at[slot].set(0),
+                hidden=tuple(h.at[slot].set(0.0) for h in st.hidden),
+                kv_valid=st.kv_valid.at[slot].set(True),
+                active=st.active.at[slot].set(False),
+                poisoned=st.poisoned.at[slot].set(False),
+            )
+            if st.feat is not None:
+                st = st._replace(
+                    feat=st.feat.at[slot].set(0.0),
+                    conf_full=st.conf_full.at[slot].set(0.0))
+            self.slot_streamed[slot] = 0
+        self.state = st
+        if self.allocator is not None:
+            self.stats.pages_in_use = self.allocator.used_pages
+            self.stats.shared_mappings = self.allocator.shared_mappings
+
+    def drain(self, *, max_steps: Optional[int] = None,
+              max_wall_s: Optional[float] = None) -> list[Request]:
+        """Offline mode: run until queue, spill list, and slots are empty
+        (BatchServer compatible — submit everything, drain, read
+        ``Request.output`` / ``Request.error``).
+
+        Watchdog (ARCHITECTURE §5c): liveness bugs fail typed instead of
+        hanging.  Three tripwires raise ``DrainStalled`` naming the stuck
+        slots: an explicit ``max_steps`` / ``max_wall_s`` budget blowing
+        while work remains, and — always on — a zero-progress monitor that
+        trips after ``_drain_patience`` consecutive steps with no
+        observable change (completions, tokens, streamed blocks,
+        queue/spill depth, or any failure-handling gauge)."""
+        t_start = self.clock()
+        steps = 0
+        idle = 0
+        snap = self._progress_snapshot()
         while self.has_work():
+            if max_steps is not None and steps >= max_steps:
+                raise DrainStalled(
+                    f"max_steps={max_steps} exhausted with work remaining",
+                    self._stuck_slots())
+            if max_wall_s is not None \
+                    and self.clock() - t_start > max_wall_s:
+                raise DrainStalled(
+                    f"max_wall_s={max_wall_s} exceeded with work remaining",
+                    self._stuck_slots())
             self.step()
+            steps += 1
+            nxt = self._progress_snapshot()
+            idle = idle + 1 if nxt == snap else 0
+            snap = nxt
+            if idle >= self._drain_patience:
+                raise DrainStalled(
+                    f"no forward progress in {idle} consecutive steps",
+                    self._stuck_slots())
         done, self._completed = self._completed, []
         return done
+
+    def _progress_snapshot(self) -> tuple:
+        """Everything the watchdog accepts as forward progress."""
+        s = self.stats
+        return (s.completed, s.tokens_out, tuple(self.slot_streamed),
+                sum(r is not None for r in self.slot_req),
+                len(self.queue), len(self._spilled), s.deadline_rejects,
+                s.poisoned_requests, s.preemptions, s.window_stalls)
+
+    def _stuck_slots(self) -> list:
+        phases = np.asarray(self.state.phase)
+        bl = np.asarray(self.state.blocks_left)
+        return [(s, r.request_id, int(phases[s]), int(bl[s]))
+                for s, r in enumerate(self.slot_req) if r is not None]

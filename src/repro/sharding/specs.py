@@ -236,6 +236,8 @@ def engine_state_pspecs(state: Any, mesh: Mesh, *, paged: bool = False) -> Any:
         sample_seeds=slot_vec(state.sample_seeds),
         block_tables=None if state.block_tables is None
         else batch_spec(state.block_tables.shape, mesh),
+        poisoned=None if state.poisoned is None
+        else slot_vec(state.poisoned),
     )
 
 

@@ -15,7 +15,8 @@ cb_spec.loader.exec_module(cb)
 
 
 def _result(*, pp_gain=3.0, pp_conc=3.0, hit_rate=1.0, allocs=0,
-            bit_identical=True, with_pp=True) -> dict:
+            bit_identical=True, with_pp=True, mx_gain=2.0, mx_preempts=3,
+            mx_bit=True, with_mx=True) -> dict:
     """A minimal healthy BENCH_serving.json payload."""
     res = {
         "lockstep": {"goodput": 10.0},
@@ -37,6 +38,14 @@ def _result(*, pp_gain=3.0, pp_conc=3.0, hit_rate=1.0, allocs=0,
             "hit_rate": hit_rate,
             "warm_prompt_page_allocs": allocs,
             "outputs_bit_identical": bit_identical,
+        }
+    if with_mx:
+        res["mixed_slo"] = {
+            "interactive_p95_gain": mx_gain,
+            "outputs_bit_identical": mx_bit,
+            "preemption": {"preemptions": mx_preempts, "pages_spilled": 12,
+                           "resume_p50": 0.2, "deadline_rejects": 0,
+                           "poisoned_requests": 0},
         }
     return res
 
@@ -79,6 +88,33 @@ def test_prefix_persist_structural_floors():
     assert any("warm_prompt_page_allocs" in e for e in errs)
     errs = cb.check(_result(bit_identical=False), base, tol=0.10)
     assert any("outputs_bit_identical" in e for e in errs)
+
+
+def test_mixed_slo_guarded_gain_and_floor():
+    base = _result()
+    # regression beyond tolerance vs the baseline gain fails
+    errs = cb.check(_result(mx_gain=1.2), base, tol=0.10)
+    assert any("mixed_slo.interactive_p95_gain" in e for e in errs)
+    # the absolute floor holds even against a degraded baseline
+    errs = cb.check(_result(mx_gain=0.9), _result(mx_gain=0.9), tol=0.10)
+    assert any("floor" in e and "mixed_slo" in e for e in errs)
+
+
+def test_mixed_slo_structural_invariants():
+    base = _result()
+    errs = cb.check(_result(mx_bit=False), base, tol=0.10)
+    assert any("mixed_slo.outputs_bit_identical" in e for e in errs)
+    errs = cb.check(_result(mx_preempts=0), base, tol=0.10)
+    assert any("preemptions" in e for e in errs)
+
+
+def test_mixed_slo_absent_from_baseline_skips_gain_guard():
+    """A baseline predating the section must not fail the gain guard —
+    the new result's own floors still apply."""
+    base = _result(with_mx=False)
+    assert cb.check(_result(), base, tol=0.10) == []
+    errs = cb.check(_result(mx_gain=0.5), base, tol=0.10)
+    assert any("mixed_slo" in e for e in errs)
 
 
 def test_lockstep_normalization_preserved():

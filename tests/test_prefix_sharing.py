@@ -101,6 +101,31 @@ def test_allocator_refcounts_and_prefix_index():
     assert al.lookup_prefix("k") is None
 
 
+def test_allocator_ledger_guards_raise_typed_errors():
+    """Double release, share-after-free, and negative refcounts are
+    bookkeeping corruption, never load conditions — they must raise a
+    typed ``LedgerError`` (which survives ``python -O``, unlike the bare
+    asserts they replaced) with a message naming the page."""
+    from repro.runtime import LedgerError, SchedulerError
+
+    assert issubclass(LedgerError, SchedulerError)
+    assert not issubclass(LedgerError, AssertionError)
+    al = PageAllocator(8)
+    pages = al.alloc(2)
+    al.release(pages)
+    with pytest.raises(LedgerError, match=f"double release of page {pages[0]}"):
+        al.release([pages[0]])
+    with pytest.raises(LedgerError, match=f"share-after-free on page {pages[1]}"):
+        al.share([pages[1]])
+    al2 = PageAllocator(8)
+    p = al2.alloc(1)[0]
+    al2._refcount[p] = -1               # simulate corrupted bookkeeping
+    with pytest.raises(LedgerError, match=f"negative refcount -1 on page {p}"):
+        al2.release([p])
+    with pytest.raises(LedgerError, match="negative refcount"):
+        al2.share([p])
+
+
 # ---------------------------------------------------------------------------
 # greedy cohorts: share for life, bit-identical outputs
 # ---------------------------------------------------------------------------

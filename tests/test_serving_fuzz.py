@@ -35,12 +35,16 @@ def reduced_model():
     return fuzz._build_reduced_model()
 
 
-def _run_seed(reduced_model, seed: int) -> dict:
+def _run_seed(reduced_model, seed: int, *, chaos: bool = False) -> dict:
+    from repro.runtime import SchedulerError
+
     model, params = reduced_model
-    flags = fuzz.trace_flags(seed)
+    flags = fuzz.trace_flags(seed, chaos=chaos)
     try:
         return fuzz.run_trace(model, params, seed, flags=flags)
-    except AssertionError as e:
+    except (AssertionError, SchedulerError) as e:
+        # SchedulerError covers the typed guards (LedgerError, DrainStalled)
+        # the allocator/scheduler deliberately raise instead of asserting
         artifact = os.environ.get("REPRO_FUZZ_ARTIFACT", "")
         if artifact:
             fuzz.write_artifact(artifact, seed, flags, str(e))
@@ -67,8 +71,44 @@ def test_fuzz_sweep(reduced_model):
         f"sweep covered only {sorted(covered)}")
 
 
+@pytest.mark.parametrize("seed", (2, 3))
+def test_chaos_smoke(reduced_model, seed):
+    """Fixed-seed chaos traces in the default suite: seeded NaN bursts and
+    deadline storms must resolve to typed verdicts with zero ledger
+    violations (seeds picked so the faults actually fire)."""
+    res = _run_seed(reduced_model, seed, chaos=True)
+    assert res["poisoned_requests"] + res["deadline_rejects"] > 0, \
+        "chaos smoke seeds must exercise at least one fault path"
+
+
+@pytest.mark.fuzz
+def test_chaos_sweep(reduced_model):
+    """The deep chaos sweep (CI serving-chaos job): every fault probability
+    raised, ledger invariants checked after every step of every trace."""
+    fired = {"inject_nan": 0, "preemptions": 0, "deadline_rejects": 0,
+             "poisoned_requests": 0}
+    for seed in range(100, 100 + N_TRACES):
+        res = _run_seed(reduced_model, seed, chaos=True)
+        fired["inject_nan"] += bool(res["flags"]["inject_nan"])
+        for k in ("preemptions", "deadline_rejects", "poisoned_requests"):
+            fired[k] += res[k]
+    # the sweep must actually exercise the fault machinery — if this trips,
+    # rebalance the chaos probabilities or widen N_TRACES
+    assert fired["inject_nan"] > 0 and fired["deadline_rejects"] > 0, \
+        f"chaos sweep fired only {fired}"
+
+
 def test_trace_flags_deterministic():
     assert fuzz.trace_flags(7) == fuzz.trace_flags(7)
+    assert fuzz.trace_flags(7, chaos=True) != fuzz.trace_flags(7)
+    # chaos only raises fault probabilities — the base scenario is shared
+    base = {k: v for k, v in fuzz.trace_flags(7).items()
+            if k in ("n_requests", "max_slots", "paged", "prefix_sharing",
+                     "block_causal", "lazy_reserve", "early_advance",
+                     "temperature")}
+    withc = {k: v for k, v in fuzz.trace_flags(7, chaos=True).items()
+             if k in base}
+    assert base == withc
 
 
 def test_harness_catches_violations(reduced_model):

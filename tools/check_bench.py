@@ -51,6 +51,14 @@ warm-store waves share one model, prompt, and pool):
     ``PREFIX_HIT_RATE_FLOOR`` (every warm admission reuses the store), and
     ``warm_prompt_page_allocs == 0`` (a warm wave never re-allocates a
     resident prompt page)
+and the mixed-SLO preemption section (self-normalized: preemption off vs
+on share one model, trace, and pool):
+  * ``mixed_slo.interactive_p95_gain`` — guarded against the baseline with
+    the same --tol AND held at ``MIXED_SLO_GAIN_FLOOR`` (preemption must
+    never make the interactive class slower than head-of-line blocking)
+  * two structural invariants: ``outputs_bit_identical`` is true (spill /
+    resume replays bit-exactly) and ``preemption.preemptions >= 1`` (the
+    run actually exercised the spill path)
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -79,6 +87,7 @@ GUARDED_GAINS = (
     "suffix_window.concurrency_gain",
     "prefix_persist.goodput_gain",
     "prefix_persist.concurrency_gain",
+    "mixed_slo.interactive_p95_gain",
 )
 
 # minimum greedy agreement of the cached run vs the uncached replay —
@@ -93,6 +102,10 @@ CONCURRENCY_GAIN_FLOOR = 1.5
 # every warm-wave admission must reuse the persistent store (the waves are
 # deterministic, so anything below 1.0 is a lost hit, not noise)
 PREFIX_HIT_RATE_FLOOR = 1.0
+
+# the mixed-SLO headline: spilling a batch resident must never make the
+# interactive class SLOWER than head-of-line blocking at equal pool bytes
+MIXED_SLO_GAIN_FLOOR = 1.0
 
 
 def _get(d: dict, path: str):
@@ -183,6 +196,23 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"prefix_persist.warm_prompt_page_allocs "
                 f"{'missing' if allocs is None else allocs} != 0 — a warm "
                 f"wave re-allocated resident prompt pages")
+    mx = new.get("mixed_slo")
+    if mx is not None:
+        if not mx.get("outputs_bit_identical"):
+            errors.append("mixed_slo.outputs_bit_identical is not true "
+                          "(spill/resume must replay bit-exactly)")
+        npre = _get(mx, "preemption.preemptions")
+        if not npre:
+            errors.append(
+                "mixed_slo.preemption.preemptions is 0 — the preemption run "
+                "never spilled, the section measures nothing")
+        gain = mx.get("interactive_p95_gain")
+        if gain is None or gain < MIXED_SLO_GAIN_FLOOR:
+            errors.append(
+                f"mixed_slo.interactive_p95_gain "
+                f"{'missing' if gain is None else f'{gain:.2f}x'} is below "
+                f"the floor {MIXED_SLO_GAIN_FLOOR:.2f}x (preemption must "
+                f"not hurt interactive latency at equal pool bytes)")
     ea = new.get("early_advance")
     if ea is not None:
         if not ea.get("outputs_bit_identical"):
@@ -239,6 +269,12 @@ def main() -> int:
         print(f"  prefix_persist.hit_rate: {pp['hit_rate']:.2f} "
               f"(floor {PREFIX_HIT_RATE_FLOOR:.2f}), "
               f"warm_prompt_page_allocs={pp.get('warm_prompt_page_allocs')}")
+    mx = new.get("mixed_slo")
+    if mx is not None and mx.get("interactive_p95_gain") is not None:
+        print(f"  mixed_slo.interactive_p95_gain: "
+              f"{mx['interactive_p95_gain']:.2f}x "
+              f"(floor {MIXED_SLO_GAIN_FLOOR:.2f}x), "
+              f"preemptions={_get(mx, 'preemption.preemptions')}")
     if errors:
         print("serving-bench regression guard FAILED:", file=sys.stderr)
         for e in errors:

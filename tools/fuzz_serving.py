@@ -20,9 +20,27 @@ through ``StreamScheduler`` and must satisfy, at EVERY step:
     by a slot's page list, a cohort's CoW reserve, or the persistent
     prefix store.
 
-and at the end of the trace every request's output must replay BIT-EQUAL
-to the offline ``engine.generate`` of the same layout (dense or paged)
-under the same generation config and per-request sample seeds.
+and at the end of the trace every request must land in exactly one typed
+terminal state (the failure-handling trichotomy, ARCHITECTURE §5):
+
+  * **completed** — ``error is None``; the output must replay BIT-EQUAL to
+    the offline ``engine.generate`` of the same layout (dense or paged)
+    under the same generation config and per-request sample seeds, even if
+    the request was preempted/resumed or shared a pool with a poisoned
+    co-resident;
+  * **rejected** — a typed ``DeadlineUnmeetable`` (deadline storms);
+  * **quarantined** — a typed ``PoisonedRequest`` (NaN injection).
+
+Chaos fault injection (``--chaos`` raises every fault probability): seeded
+NaN bursts written into a victim slot's PRIVATE KV bytes mid-trace,
+deadline storms (a mix of impossible, marginal, and generous SLO budgets),
+priority mixes with preemption on an adversarially tight pool, and the
+full allocator-ledger invariant suite checked after EVERY step.  A NaN
+burst may be overwritten by the victim's next refresh before any read —
+normal completion is a legal outcome, which the trichotomy absorbs.
+Deadline verdicts depend on the real clock, so a replayed seed may split
+completed/rejected differently; every split must still satisfy the same
+invariants.
 
 Library use (what tests/test_serving_fuzz.py drives)::
 
@@ -31,6 +49,7 @@ Library use (what tests/test_serving_fuzz.py drives)::
 CLI smoke (builds the reduced 4-layer config; CPU-safe)::
 
     PYTHONPATH=src python tools/fuzz_serving.py --traces 20 --seed 0
+    PYTHONPATH=src python tools/fuzz_serving.py --traces 20 --chaos
 
 A failing trace prints and (when ``--artifact`` / ``$REPRO_FUZZ_ARTIFACT``
 is set) writes a JSON artifact with the seed and resolved flag assignment,
@@ -55,9 +74,11 @@ PAGE_SIZE = 8
 N_VP = (PROMPT_LEN + GEN_LENGTH) // PAGE_SIZE
 
 
-def trace_flags(seed: int) -> dict:
+def trace_flags(seed: int, *, chaos: bool = False) -> dict:
     """Resolve a seed to a serving-trace configuration (pure; the same seed
-    always fuzzes the same scenario)."""
+    always fuzzes the same scenario).  ``chaos=True`` raises every fault
+    probability; the fault draws come AFTER all base draws, so a seed's
+    base scenario is identical with and without chaos."""
     rng = np.random.default_rng(seed)
     paged = bool(rng.random() < 0.85)        # dense traces keep coverage
     lazy = bool(paged and rng.random() < 0.35)
@@ -77,7 +98,31 @@ def trace_flags(seed: int) -> dict:
         temperature=float(rng.choice([0.0, 0.7])),
         tight_pool=bool(paged and rng.random() < 0.3),
     )
+    # fault-injection draws (ARCHITECTURE §5): appended after every base
+    # draw so pre-chaos seeds keep resolving to the same base scenario
+    n = flags["n_requests"]
+    flags["inject_nan"] = bool(rng.random() < (0.6 if chaos else 0.25))
+    flags["nan_step"] = int(rng.integers(2, 13))
+    storm = bool(rng.random() < (0.5 if chaos else 0.2))
+    # impossible / marginal / generous / no budget — indexes into _DEADLINES
+    flags["deadline_picks"] = [int(x) for x in rng.integers(0, 4, n)] \
+        if storm else [3] * n
+    preempt_ok = paged and not sharing and not lazy
+    preempt = bool(preempt_ok and rng.random() < (0.7 if chaos else 0.35))
+    flags["preemption"] = preempt
+    flags["priorities"] = [int(x) for x in rng.integers(0, 3, n)] \
+        if preempt else [0] * n
+    if preempt:
+        # adversarial pool pressure: preemption only fires when a higher
+        # class actually starves, so pin the pool tight
+        flags["tight_pool"] = True
     return flags
+
+
+# deadline menu for storm traces: 0.0 rejects at submit (typed, always),
+# 1e-4 rejects at admission once any wait/estimate registers, 60.0 always
+# admits, None opts out of the SLO path entirely
+_DEADLINES = (0.0, 1e-4, 60.0, None)
 
 
 def _gen_config(flags: dict):
@@ -107,11 +152,63 @@ def _requests(flags: dict, vocab_size: int, seed: int):
                              int(rng.integers(4, PROMPT_LEN + 1))
                              ).astype(np.int32)
         prompts.append(p)
-        reqs.append(Request(prompt=p.copy(), sample_seed=1000 + i))
+        reqs.append(Request(
+            prompt=p.copy(), sample_seed=1000 + i,
+            priority=flags.get("priorities", [0] * flags["n_requests"])[i],
+            deadline_s=_DEADLINES[
+                flags.get("deadline_picks", [3] * flags["n_requests"])[i]]))
     arrivals = sorted(int(a) for a in
                       rng.integers(0, flags["arrival_span"] + 1,
                                    flags["n_requests"]))
     return reqs, arrivals
+
+
+def inject_nan(sched) -> bool:
+    """Poison one resident slot's KV bytes in place (a seeded NaN burst).
+
+    The victim is the lowest-index ACTIVE resident; in paged mode the burst
+    lands on the page under the victim's current block frontier, and ONLY
+    if that page is private (refcount 1) — the detector/quarantine contract
+    is that a poisoned row never perturbs co-residents, so the injection
+    must respect the same isolation the engine guarantees (shared pages are
+    read-only prompt content and are never written post-divergence either).
+    Dense mode poisons the victim row's KV at the frontier position.
+    Returns False (retry next step) when no eligible victim exists."""
+    import jax
+    import jax.numpy as jnp
+
+    st = sched.state
+    active = np.asarray(st.active)
+    victims = [s for s, r in enumerate(sched.slot_req)
+               if r is not None and active[s] and s not in sched.stalled]
+    if not victims:
+        return False
+    slot = victims[0]
+    bs = int(np.asarray(st.bs)[slot])
+    if sched.paged:
+        vp = bs // sched.page_size
+        bt = np.asarray(st.block_tables)
+        if vp >= bt.shape[1]:
+            return False
+        pg = int(bt[slot, vp])
+        if pg <= 0 or sched.allocator.refcount(pg) != 1:
+            return False
+
+        def poison(pool):
+            if not jnp.issubdtype(pool.dtype, jnp.floating):
+                return pool              # int8 payload: its scale plane is hit
+            return pool.at[:, pg].set(jnp.nan)
+    else:
+
+        def poison(pool):
+            if not jnp.issubdtype(pool.dtype, jnp.floating):
+                return pool
+            return pool.at[:, slot, bs].set(jnp.nan)
+
+    caches = dict(st.caches)
+    caches["kv"] = jax.tree_util.tree_map(poison, caches["kv"])
+    sched.state = st._replace(caches=caches)
+    return True
 
 
 def check_allocator_invariants(sched) -> None:
@@ -171,50 +268,79 @@ def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
     if flags["paged"]:
         skw.update(paged=True, page_size=PAGE_SIZE,
                    prefix_sharing=flags["prefix_sharing"],
-                   lazy_reserve=flags["lazy_reserve"])
+                   lazy_reserve=flags["lazy_reserve"],
+                   preemption=flags.get("preemption", False))
         if flags["tight_pool"]:
             # just enough for ~1.5 requests: exercises page-gating, FIFO
-            # waits, and persistent-store LRU eviction
+            # waits, persistent-store LRU eviction, and (with preemption)
+            # forced spills under adversarial pressure
             skw["kv_pages"] = N_VP + N_VP // 2 + 1
     sched = StreamScheduler(model, params, gen, **skw)
     pending = list(zip(arrivals, reqs))
     steps = 0
+    injected = not flags.get("inject_nan", False)
     while pending or sched.has_work():
         while pending and pending[0][0] <= steps:
             sched.submit(pending.pop(0)[1])
         sched.step()
+        if not injected and steps >= flags["nan_step"]:
+            # seeded NaN burst: retries until an eligible victim is resident
+            injected = inject_nan(sched)
         check_allocator_invariants(sched)
         steps += 1
         assert steps < 5000, "trace did not terminate"
-    assert sched.stats.completed == len(reqs)
+    # failure-handling trichotomy: every request ends in exactly one typed
+    # terminal state, and the completion counter counts only clean finishes
+    from repro.runtime import DeadlineUnmeetable, PoisonedRequest
+
+    done_ok = [r for r in reqs if r.error is None]
+    rejected = [r for r in reqs if isinstance(r.error, DeadlineUnmeetable)]
+    poisoned = [r for r in reqs if isinstance(r.error, PoisonedRequest)]
+    assert len(done_ok) + len(rejected) + len(poisoned) == len(reqs), \
+        "a request retired with an untyped error"
+    assert all(r.output is not None for r in done_ok), \
+        "a completed request has no output"
+    assert all(r.output is None for r in rejected + poisoned), \
+        "a failed request leaked a partial output"
+    assert sched.stats.completed == len(done_ok)
+    assert sched.stats.deadline_rejects == len(rejected)
+    assert sched.stats.poisoned_requests == len(poisoned)
     # end-of-trace residency: only the persistent store may keep pages
     if sched.allocator is not None:
         store = sum(len(m) for _, m in sched.allocator._prefix.values()) \
             if sched.allocator.persistent else 0
         assert sched.allocator.used_pages == store, \
             "pages leaked past retirement"
-    # offline differential replay, same layout
-    ekw = dict(paged=True, page_size=PAGE_SIZE) if flags["paged"] else {}
-    eng = DiffusionEngine(model, gen, **ekw)
-    # paged serving attention-masks the left pad (prompt_start); dense
-    # serving attends it as pad tokens (scheduler admission sets 0) — the
-    # replay must mirror whichever layout the trace ran
-    ps = [PROMPT_LEN - len(r.prompt) for r in reqs] if flags["paged"] \
-        else [0] * len(reqs)
-    ref = np.asarray(eng.generate(
-        params, jnp.asarray(pad_and_stack(reqs, 0, PROMPT_LEN)),
-        jax.random.PRNGKey(0),
-        prompt_start=jnp.asarray(ps, jnp.int32),
-        sample_seeds=jnp.asarray([r.sample_seed for r in reqs])))
-    for i, r in enumerate(reqs):
-        np.testing.assert_array_equal(
-            r.output, ref[i, PROMPT_LEN:],
-            err_msg=f"seed {seed}: request {i} diverged from offline replay "
-                    f"(flags {flags})")
+    # offline differential replay, same layout — over the CLEAN finishers
+    # only: a completed request must be bit-identical to its uninterrupted
+    # offline run even if it was preempted/resumed mid-trace or shared the
+    # pool with a quarantined co-resident
+    if done_ok:
+        ekw = dict(paged=True, page_size=PAGE_SIZE) if flags["paged"] else {}
+        eng = DiffusionEngine(model, gen, **ekw)
+        # paged serving attention-masks the left pad (prompt_start); dense
+        # serving attends it as pad tokens (scheduler admission sets 0) — the
+        # replay must mirror whichever layout the trace ran
+        ps = [PROMPT_LEN - len(r.prompt) for r in done_ok] if flags["paged"] \
+            else [0] * len(done_ok)
+        ref = np.asarray(eng.generate(
+            params, jnp.asarray(pad_and_stack(done_ok, 0, PROMPT_LEN)),
+            jax.random.PRNGKey(0),
+            prompt_start=jnp.asarray(ps, jnp.int32),
+            sample_seeds=jnp.asarray([r.sample_seed for r in done_ok])))
+        for i, r in enumerate(done_ok):
+            np.testing.assert_array_equal(
+                r.output, ref[i, PROMPT_LEN:],
+                err_msg=f"seed {seed}: request {r.request_id} diverged from "
+                        f"offline replay (flags {flags})")
     return dict(seed=seed, steps=steps, flags=flags,
                 prefix_hits=sched.stats.prefix_hits,
                 prefix_evictions=sched.stats.prefix_evictions,
-                cow_forks=sched.stats.cow_forks)
+                cow_forks=sched.stats.cow_forks,
+                preemptions=sched.stats.preemptions,
+                pages_spilled=sched.stats.pages_spilled,
+                deadline_rejects=sched.stats.deadline_rejects,
+                poisoned_requests=sched.stats.poisoned_requests)
 
 
 def write_artifact(path: str, seed: int, flags: dict, error: str) -> None:
@@ -238,23 +364,33 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--traces", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0, help="first trace seed")
+    ap.add_argument("--chaos", action="store_true",
+                    help="raise every fault-injection probability (NaN "
+                         "bursts, deadline storms, forced preemption)")
     ap.add_argument("--artifact",
                     default=os.environ.get("REPRO_FUZZ_ARTIFACT", ""),
                     help="write failing seed/flags JSON here")
     args = ap.parse_args(argv)
+    from repro.runtime import SchedulerError
+
     model, params = _build_reduced_model()
     for seed in range(args.seed, args.seed + args.traces):
-        flags = trace_flags(seed)
+        flags = trace_flags(seed, chaos=args.chaos)
         try:
             res = run_trace(model, params, seed, flags=flags)
-        except AssertionError as e:
+        except (AssertionError, SchedulerError) as e:
+            # SchedulerError covers the typed guards (LedgerError,
+            # DrainStalled) that deliberately are NOT bare asserts
             print(f"FAIL seed={seed} flags={flags}\n{e}", file=sys.stderr)
             if args.artifact:
                 write_artifact(args.artifact, seed, flags, str(e))
             return 1
         print(f"ok seed={res['seed']} steps={res['steps']} "
               f"hits={res['prefix_hits']} evict={res['prefix_evictions']} "
-              f"forks={res['cow_forks']}")
+              f"forks={res['cow_forks']} preempt={res['preemptions']} "
+              f"spill={res['pages_spilled']} "
+              f"rejects={res['deadline_rejects']} "
+              f"poisoned={res['poisoned_requests']}")
     print(f"{args.traces} traces: zero divergences, zero violations")
     return 0
 
