@@ -294,6 +294,56 @@ def suffix_window_report(cfg: ModelConfig, gen: GenerationConfig, *,
     }
 
 
+def disagg_report(cfg: ModelConfig, gen: GenerationConfig, *,
+                  prompt_len: int, decode_prompt_len: int,
+                  slots_per_shard: int, n_long: int, n_short: int,
+                  mesh_axes: dict | None = None) -> dict:
+    """Analytic bound for prefill/decode disaggregation (dInfer smoothing).
+
+    Every dLLM iteration reprocesses context, so the jitted step's width is
+    the scheduler's padded ``prompt_len + gen_length`` for EVERY co-resident
+    row: one long prompt in the batch inflates each decode iteration of
+    every short request sharing the scheduler.  Disaggregation pins long
+    prompts to ``refresh`` shards (full ``prompt_len``) and pads the
+    ``decode`` shards to ``decode_prompt_len`` only.
+
+    ``decode_iter_gain`` is the per-iteration work ratio of a decode step
+    at the mixed (long-padded) width vs the disaggregated (short-padded)
+    width — the analytic CEILING on the decode p95 improvement the serving
+    benchmark can measure (wall-clock gains sit below it on small models,
+    where fixed dispatch overhead dilutes the width term, and above it only
+    through queueing effects the iteration model does not count, i.e. short
+    rows stuck behind a long refresh).  ``refresh_displacement`` counts how
+    many short-width decode iterations ONE long prompt refresh displaces —
+    the head-of-line term the mixed deployment adds to decode p95 and the
+    disaggregated one removes.  ``placement`` is the routing split the
+    ``disagg`` policy must produce on the given trace (long prompts to the
+    refresh shards, short to the decode shards) — the bench asserts the
+    measured split EXACTLY."""
+    mesh_axes = mesh_axes or {}
+    shape_long = InputShape("disagg_long", prompt_len + gen.gen_length,
+                            slots_per_shard, "decode")
+    shape_short = InputShape("disagg_short",
+                             decode_prompt_len + gen.gen_length,
+                             slots_per_shard, "decode")
+    mixed = decode_step_cost(cfg, shape_long, gen, mesh_axes)
+    disagg = decode_step_cost(cfg, shape_short, gen, mesh_axes)
+    refresh = prefill_cost(
+        cfg, InputShape("disagg_refresh", prompt_len + gen.gen_length,
+                        1, "prefill"),
+        gen, mesh_axes)
+    return {
+        "t_total_long": prompt_len + gen.gen_length,
+        "t_total_short": decode_prompt_len + gen.gen_length,
+        "decode_iter_flops_mixed": mixed.flops,
+        "decode_iter_flops_disagg": disagg.flops,
+        "decode_iter_gain": mixed.flops / max(disagg.flops, 1.0),
+        "refresh_flops": refresh.flops,
+        "refresh_displacement": refresh.flops / max(disagg.flops, 1.0),
+        "placement": {"refresh": n_long, "decode": n_short},
+    }
+
+
 # ---------------------------------------------------------------------------
 # step costs
 # ---------------------------------------------------------------------------

@@ -134,6 +134,15 @@ PERSIST_POOL_PAGES = 6          # prefix-persist pool: a 1-block request
                                 # unshared admission gates at 1 resident
                                 # while a warm persistent store (3 resident
                                 # prompt pages, 1 private page each) fits 3
+MH_LONG_PROMPT_LEN = 472        # multi-host long class: t_total = 504
+MH_SHORT_PROMPT_LEN = 24        # multi-host decode class: t_total = 56
+MH_LONG = 2                     # long-prefill requests in the mixed trace
+MH_SHORT = 6                    # short decode requests in the mixed trace
+MH_SHARDS = 2
+
+# every section name bench() can produce; --sections picks a subset
+SECTIONS = ("core", "early_advance", "feature_cache", "suffix_window",
+            "mixed_slo", "dup_prefix", "prefix_persist", "multi_host")
 
 
 def _mk_requests(bm, n: int, seed: int = 0) -> list[Request]:
@@ -541,6 +550,205 @@ def _run_mixed_slo(bm, gcfg: GenerationConfig, *, preempt: bool,
     }
 
 
+def _mk_mh_requests(bm) -> tuple[list[Request], list[Request], list[Request]]:
+    """Deterministic mixed-length trace: long-prefill prompts interleaved
+    with short one-block decode requests, so in the single-shard baseline
+    the longs are co-resident with the shorts — the iteration inflation the
+    disagg split exists to remove."""
+    rng = np.random.default_rng(55)
+    vocab = bm.model.cfg.vocab_size
+    longs = [Request(prompt=rng.integers(3, vocab, MH_LONG_PROMPT_LEN
+                                         ).astype(np.int32), sample_seed=i)
+             for i in range(MH_LONG)]
+    shorts = [Request(prompt=rng.integers(3, vocab, MH_SHORT_PROMPT_LEN
+                                          ).astype(np.int32),
+                      max_new_tokens=BLOCK_LENGTH, sample_seed=100 + i)
+              for i in range(MH_SHORT)]
+    order = [longs[0]] + shorts[:3] + [longs[1]] + shorts[3:]
+    return longs, shorts, order
+
+
+def _run_mh_single(bm, gcfg: GenerationConfig, reqs, shorts, arrivals, *,
+                   kv_pages: int) -> dict:
+    """Single-shard baseline: ONE scheduler padded to the LONG prompt width
+    serves the whole mixed trace, so every short request's decode iterations
+    (and its queueing) run at ``MH_LONG_PROMPT_LEN + gen_length`` width."""
+    sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
+                            prompt_len=MH_LONG_PROMPT_LEN, paged=True,
+                            page_size=PAGE_SIZE, kv_pages=kv_pages,
+                            early_advance=True)
+    sched.submit(Request(prompt=reqs[0].prompt.copy()))    # warm the compile
+    sched.drain()
+    pages_total = sched.stats.pages_total
+    sched.stats.__init__()
+    sched.stats.pages_total = pages_total
+    makespan = _replay(sched.submit, sched.step,
+                       lambda: not sched.has_work(), arrivals, reqs)
+    if sched.stats.completed != len(reqs):
+        raise RuntimeError(
+            f"multi_host single-shard run completed {sched.stats.completed} "
+            f"of {len(reqs)} requests")
+    lat = np.asarray(sched.stats.latencies_s)
+    dec = np.asarray([r.latency_s for r in shorts])
+    return {
+        "goodput": sched.stats.tokens_out / makespan,
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "decode_p50": float(np.percentile(dec, 50)),
+        "decode_p95": float(np.percentile(dec, 95)),
+        "makespan": makespan,
+        "completed": sched.stats.completed,
+        "pages_total": pages_total,
+        "step_traces": sched.engine.step_trace_count,
+        "outputs": {r.request_id: r.output.tolist() for r in reqs},
+    }
+
+
+def _run_mh_sharded(bm, gcfg: GenerationConfig, reqs, shorts, arrivals, *,
+                    kv_pages: int):
+    """2-shard disaggregated run at the SAME total pool bytes: shard 0 is
+    the refresh lane (full long width), shard 1 the decode lane padded to
+    ``MH_SHORT_PROMPT_LEN`` only; returns (section dict, scheduler) so the
+    caller can replay each shard for the bit-identity gate."""
+    from repro.runtime import ShardedStreamScheduler
+    sched = ShardedStreamScheduler(
+        bm.model, bm.params, gcfg, shards=MH_SHARDS, placement="disagg",
+        refresh_shards=1, max_slots=SLOTS, prompt_len=MH_LONG_PROMPT_LEN,
+        decode_prompt_len=MH_SHORT_PROMPT_LEN, paged=True,
+        page_size=PAGE_SIZE, kv_pages=kv_pages, early_advance=True)
+    # warm BOTH lane widths (one long + one short request) off the clock
+    sched.submit(Request(prompt=reqs[0].prompt.copy()))
+    sched.submit(Request(prompt=shorts[0].prompt.copy(),
+                         max_new_tokens=BLOCK_LENGTH))
+    sched.drain()
+    sched.placements.clear()
+    sched.placed = [0] * MH_SHARDS
+    sched.reset_stats()
+    makespan = _replay(sched.submit, sched.step,
+                       lambda: not sched.has_work(), arrivals, reqs)
+    if sched.stats.completed != len(reqs):
+        raise RuntimeError(
+            f"multi_host disagg run completed {sched.stats.completed} "
+            f"of {len(reqs)} requests")
+    lat = np.asarray(sched.stats.latencies_s)
+    dec = np.asarray([r.latency_s for r in shorts])
+    out = {
+        "goodput": sched.stats.tokens_out / makespan,
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "decode_p50": float(np.percentile(dec, 50)),
+        "decode_p95": float(np.percentile(dec, 95)),
+        "makespan": makespan,
+        "completed": sched.stats.completed,
+        "pages_total": sum(a.num_pages - 1
+                           for a in sched.allocator._lanes),
+        "step_traces": sched.engine.step_trace_count,
+        "shard_gauges": sched.shard_gauges(),
+        "outputs": {r.request_id: r.output.tolist() for r in reqs},
+    }
+    return out, sched
+
+
+def _mh_bit_identity(bm, gcfg: GenerationConfig, sched, reqs) -> None:
+    """Per-shard offline gate: a fresh SINGLE-shard scheduler with lane
+    ``s``'s exact config (width, pool, seed) replaying lane ``s``'s
+    requests must reproduce the sharded outputs bit for bit (plain raise —
+    the gate must survive ``python -O``)."""
+    for s in range(sched.shards):
+        lane = sched.lanes[s]
+        lane_reqs = [r for r in reqs if sched.placements[r.request_id] == s]
+        if not lane_reqs:
+            raise RuntimeError(f"multi_host shard {s} received no requests")
+        replay = StreamScheduler(
+            bm.model, bm.params, gcfg, max_slots=len(lane.slot_req),
+            prompt_len=lane.prompt_len, paged=True, page_size=PAGE_SIZE,
+            kv_pages=lane.allocator.num_pages, early_advance=True, seed=s)
+        for r in lane_reqs:
+            replay.submit(Request(prompt=r.prompt.copy(),
+                                  request_id=r.request_id,
+                                  max_new_tokens=r.max_new_tokens,
+                                  sample_seed=r.sample_seed))
+        ref = {r.request_id: r.output for r in replay.drain()}
+        for r in lane_reqs:
+            if r.output.tolist() != ref[r.request_id].tolist():
+                raise RuntimeError(
+                    f"multi_host shard {s} request {r.request_id} diverged "
+                    f"from its single-shard replay (placement must be "
+                    f"bit-transparent)")
+
+
+def _bench_multi_host(bm, gcfg: GenerationConfig, mean_ia: float) -> dict:
+    """Single-shard vs 2-shard disaggregated serving at EQUAL total pool
+    bytes on a Poisson mixed-prompt-length trace."""
+    longs, shorts, order = _mk_mh_requests(bm)
+    n_vp_long = (MH_LONG_PROMPT_LEN + gcfg.gen_length) // PAGE_SIZE
+    kv_pages = MH_SHARDS * ((SLOTS // MH_SHARDS) * n_vp_long + 1)
+    arrivals = _poisson_arrivals(len(order), mean_ia, seed=4)
+    short_ids = {r.request_id for r in shorts}
+    single_order = [Request(prompt=r.prompt.copy(), request_id=r.request_id,
+                            max_new_tokens=r.max_new_tokens,
+                            sample_seed=r.sample_seed) for r in order]
+    single_shorts = [r for r in single_order if r.request_id in short_ids]
+    single = _run_mh_single(bm, gcfg, single_order, single_shorts, arrivals,
+                            kv_pages=kv_pages)
+    disagg, sched = _run_mh_sharded(bm, gcfg, order, shorts, arrivals,
+                                    kv_pages=kv_pages)
+    _mh_bit_identity(bm, gcfg, sched, order)
+    bound = costmodel.disagg_report(
+        bm.model.cfg, gcfg, prompt_len=MH_LONG_PROMPT_LEN,
+        decode_prompt_len=MH_SHORT_PROMPT_LEN,
+        slots_per_shard=SLOTS // MH_SHARDS, n_long=MH_LONG, n_short=MH_SHORT)
+    # routing gate: the disagg policy must produce EXACTLY the analytic
+    # split — longs on the refresh shard, shorts on the decode shard
+    for r in longs:
+        if sched.placements[r.request_id] != 0:
+            raise RuntimeError(
+                f"long request {r.request_id} routed to shard "
+                f"{sched.placements[r.request_id]}, expected refresh shard 0")
+    for r in shorts:
+        if sched.placements[r.request_id] != 1:
+            raise RuntimeError(
+                f"short request {r.request_id} routed to shard "
+                f"{sched.placements[r.request_id]}, expected decode shard 1")
+    if sched.placed != [MH_LONG, MH_SHORT]:
+        raise RuntimeError(
+            f"measured routing split {sched.placed} != analytic "
+            f"{[MH_LONG, MH_SHORT]}")
+    single.pop("outputs")
+    disagg.pop("outputs")
+    goodput_gain = disagg["goodput"] / max(single["goodput"], 1e-9)
+    decode_p95_gain = single["decode_p95"] / max(disagg["decode_p95"], 1e-9)
+    # the analytic CEILING on the decode p95 win: per-iteration width work
+    # ratio compounded with the worst-case head-of-line term (a short row
+    # stuck behind one full long-prompt refresh) — measured gains above it
+    # mean the model and the measurement disagree
+    ceiling = bound["decode_iter_gain"] * (1.0 + bound["refresh_displacement"])
+    if decode_p95_gain <= 1.0:
+        raise RuntimeError(
+            f"disaggregation did not improve decode p95 "
+            f"({single['decode_p95']:.3f}s -> {disagg['decode_p95']:.3f}s) — "
+            f"long prefill still inflates the decode class")
+    if decode_p95_gain > ceiling:
+        raise RuntimeError(
+            f"measured decode p95 gain {decode_p95_gain:.2f}x exceeds the "
+            f"analytic ceiling {ceiling:.2f}x — the cost model and the "
+            f"measurement disagree")
+    if goodput_gain < 1.5:
+        raise RuntimeError(
+            f"disagg goodput gain {goodput_gain:.2f}x < 1.5x acceptance "
+            f"floor at equal total pool bytes")
+    return {
+        "single": single,
+        "disagg": disagg,
+        "shards": MH_SHARDS,
+        "goodput_gain": goodput_gain,
+        "decode_p95_gain": decode_p95_gain,
+        "outputs_bit_identical": True,
+        "routing": {"refresh": sched.placed[0], "decode": sched.placed[1]},
+        "bound": bound,
+    }
+
+
 def _measure_cycle_s(bm, gcfg: GenerationConfig) -> float:
     """Wall time of one warmed block cycle of the streaming engine."""
     sched = StreamScheduler(bm.model, bm.params, gcfg, max_slots=SLOTS,
@@ -557,53 +765,70 @@ def _measure_cycle_s(bm, gcfg: GenerationConfig) -> float:
     return sched.stats.wall_s / max(n_steps, 1) * gcfg.resolved_steps()
 
 
-def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
+def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b",
+          sections=None):
+    """Run the serving bench.  ``sections`` is an optional iterable of
+    names from ``SECTIONS``; ``None`` runs everything.  Skipped sections
+    are simply absent from the result dict (check_bench treats absent
+    sections as not-run, not as failures)."""
+    if sections is not None:
+        sections = set(sections)
+        unknown = sections - set(SECTIONS)
+        if unknown:
+            raise ValueError(
+                f"unknown bench sections {sorted(unknown)}; "
+                f"choose from {list(SECTIONS)}")
+    want = lambda s: sections is None or s in sections
     bm = build_bench_model(arch)
     gcfg = gen_cfg(bm, "es", gen_length=GEN_LENGTH, block_length=BLOCK_LENGTH)
     cycle_s = _measure_cycle_s(bm, gcfg)
     # `load` ~= offered blocks per servable block-cycle across SLOTS slots
     avg_blocks = sum(REQ_BLOCKS) / len(REQ_BLOCKS)
     mean_ia = cycle_s * avg_blocks / (SLOTS * load)
-    reqs_a = _mk_requests(bm, n_requests, seed=0)
-    reqs_b = _mk_requests(bm, n_requests, seed=0)
-    reqs_c = _mk_requests(bm, n_requests, seed=0)
     arrivals = _poisson_arrivals(n_requests, mean_ia)
-    lock = _run_lockstep(bm, gcfg, reqs_a, arrivals)
-    stream = _run_stream(bm, gcfg, reqs_b, arrivals)
-    # paged: 2x the slots at the SAME pool bytes as the dense run —
     # SLOTS dense slots hold SLOTS * t_total rows = SLOTS * n_vpages pages
     t_total = PROMPT_LEN + GEN_LENGTH
     n_vp = t_total // PAGE_SIZE
-    paged = _run_stream(bm, gcfg, reqs_c, arrivals, max_slots=2 * SLOTS,
-                        paged=True, kv_pages=SLOTS * n_vp + 1)
-    kv_report = costmodel.serving_kv_report(
-        bm.model.cfg, slots_dense=SLOTS, t_total=t_total,
-        paged_tokens_mean=paged["mean_pages_in_use"] * PAGE_SIZE,
-        pool_pages=SLOTS * n_vp + 1, page_size=PAGE_SIZE)
+    res = {"mean_interarrival_s": mean_ia}
+    if want("core"):
+        reqs_a = _mk_requests(bm, n_requests, seed=0)
+        reqs_b = _mk_requests(bm, n_requests, seed=0)
+        reqs_c = _mk_requests(bm, n_requests, seed=0)
+        lock = _run_lockstep(bm, gcfg, reqs_a, arrivals)
+        stream = _run_stream(bm, gcfg, reqs_b, arrivals)
+        # paged: 2x the slots at the SAME pool bytes as the dense run
+        paged = _run_stream(bm, gcfg, reqs_c, arrivals, max_slots=2 * SLOTS,
+                            paged=True, kv_pages=SLOTS * n_vp + 1)
+        kv_report = costmodel.serving_kv_report(
+            bm.model.cfg, slots_dense=SLOTS, t_total=t_total,
+            paged_tokens_mean=paged["mean_pages_in_use"] * PAGE_SIZE,
+            pool_pages=SLOTS * n_vp + 1, page_size=PAGE_SIZE)
+        res.update(lockstep=lock, stream=stream, paged=paged, kv=kv_report)
     # per-row cadence: block-aligned vs early-advance at EQUAL pool bytes
     # on a parallel-decoding workload (threshold 0 ⇒ one-iteration blocks,
     # the maximal-dead-time regime the mixed-mode step exists for)
-    ea_cfg = gen_cfg(bm, "es", gen_length=GEN_LENGTH,
-                     block_length=BLOCK_LENGTH,
-                     parallel_decoding=True, pd_threshold=0.0)
-    ea_pages = SLOTS * n_vp + 1
-    reqs_al = _mk_requests(bm, n_requests, seed=0)
-    reqs_ea = _mk_requests(bm, n_requests, seed=0)
-    aligned = _run_cadence(bm, ea_cfg, reqs_al, arrivals,
-                           early=False, kv_pages=ea_pages)
-    early = _run_cadence(bm, ea_cfg, reqs_ea, arrivals,
-                         early=True, kv_pages=ea_pages)
-    # plain raise (survives python -O): the tentpole's soundness gate
-    if aligned.pop("outputs") != early.pop("outputs"):
-        raise RuntimeError(
-            "early advance changed greedy outputs (must be bit-identical)")
-    early_advance = {
-        "aligned": aligned,
-        "early": early,
-        "outputs_bit_identical": True,
-        "goodput_gain": early["goodput"] / max(aligned["goodput"], 1e-9),
-        "p95_gain": aligned["p95"] / max(early["p95"], 1e-9),
-    }
+    if want("early_advance"):
+        ea_cfg = gen_cfg(bm, "es", gen_length=GEN_LENGTH,
+                         block_length=BLOCK_LENGTH,
+                         parallel_decoding=True, pd_threshold=0.0)
+        ea_pages = SLOTS * n_vp + 1
+        reqs_al = _mk_requests(bm, n_requests, seed=0)
+        reqs_ea = _mk_requests(bm, n_requests, seed=0)
+        aligned = _run_cadence(bm, ea_cfg, reqs_al, arrivals,
+                               early=False, kv_pages=ea_pages)
+        early = _run_cadence(bm, ea_cfg, reqs_ea, arrivals,
+                             early=True, kv_pages=ea_pages)
+        # plain raise (survives python -O): the tentpole's soundness gate
+        if aligned.pop("outputs") != early.pop("outputs"):
+            raise RuntimeError(
+                "early advance changed greedy outputs (must be bit-identical)")
+        res["early_advance"] = {
+            "aligned": aligned,
+            "early": early,
+            "outputs_bit_identical": True,
+            "goodput_gain": early["goodput"] / max(aligned["goodput"], 1e-9),
+            "p95_gain": aligned["p95"] / max(early["p95"], 1e-9),
+        }
     # adaptive feature cache: long-prompt Poisson trace, cached vs uncached
     # at EQUAL pool bytes.  Both runs refresh every iteration
     # (prompt_refresh_period=1 — the recompute-everything regime the
@@ -613,160 +838,174 @@ def bench(n_requests: int = 10, load: float = 0.8, arch: str = "llada-8b"):
     # deeper stack with the first skip boundary one group in: the shallow
     # probe is 1/8 of the layers, so refresh FLOPs (not dispatch overhead)
     # dominate the comparison even at bench sizes
-    bm_fc = build_bench_model(arch, n_layers=CACHE_N_LAYERS)
-    period = bm_fc.model.period
-    fc_stages = tuple(SkipStage(g * period, 0.5) for g in CACHE_STAGES)
-    fc_kw = dict(gen_length=CACHE_GEN_LENGTH, block_length=BLOCK_LENGTH,
-                 prompt_refresh_period=1, stages=fc_stages)
-    fc_base_cfg = gen_cfg(bm_fc, "es", **fc_kw)
-    fc_cached_cfg = gen_cfg(bm_fc, "es", **fc_kw,
-                            cache_prompt_interval=CACHE_PROMPT_INTERVAL,
-                            cache_refresh_fraction=CACHE_REFRESH_FRACTION)
-    fc_pages = SLOTS * ((LONG_PROMPT_LEN + CACHE_GEN_LENGTH) // PAGE_SIZE) + 1
-    fc_arrivals = _poisson_arrivals(n_requests, mean_ia, seed=2)
-    fc_base = _run_feature_cache(bm_fc, fc_base_cfg,
-                                 _mk_long_requests(bm_fc, n_requests),
-                                 fc_arrivals, kv_pages=fc_pages)
-    fc_cached = _run_feature_cache(bm_fc, fc_cached_cfg,
-                                   _mk_long_requests(bm_fc, n_requests),
-                                   fc_arrivals, kv_pages=fc_pages)
-    out_u = np.asarray(fc_base.pop("outputs"))
-    out_c = np.asarray(fc_cached.pop("outputs"))
-    greedy_agreement = float((out_u == out_c).mean())
-    feature_cache = {
-        "uncached": fc_base,
-        "cached": fc_cached,
-        "goodput_gain": fc_cached["goodput"] / max(fc_base["goodput"], 1e-9),
-        # quality delta: greedy disagreement of the cached run against the
-        # uncached replay of the SAME trace (0.0 = bit-identical outputs)
-        "greedy_agreement": greedy_agreement,
-        "quality_delta": 1.0 - greedy_agreement,
-    }
+    if want("feature_cache"):
+        bm_fc = build_bench_model(arch, n_layers=CACHE_N_LAYERS)
+        period = bm_fc.model.period
+        fc_stages = tuple(SkipStage(g * period, 0.5) for g in CACHE_STAGES)
+        fc_kw = dict(gen_length=CACHE_GEN_LENGTH, block_length=BLOCK_LENGTH,
+                     prompt_refresh_period=1, stages=fc_stages)
+        fc_base_cfg = gen_cfg(bm_fc, "es", **fc_kw)
+        fc_cached_cfg = gen_cfg(bm_fc, "es", **fc_kw,
+                                cache_prompt_interval=CACHE_PROMPT_INTERVAL,
+                                cache_refresh_fraction=CACHE_REFRESH_FRACTION)
+        fc_pages = (SLOTS * ((LONG_PROMPT_LEN + CACHE_GEN_LENGTH)
+                             // PAGE_SIZE) + 1)
+        fc_arrivals = _poisson_arrivals(n_requests, mean_ia, seed=2)
+        fc_base = _run_feature_cache(bm_fc, fc_base_cfg,
+                                     _mk_long_requests(bm_fc, n_requests),
+                                     fc_arrivals, kv_pages=fc_pages)
+        fc_cached = _run_feature_cache(bm_fc, fc_cached_cfg,
+                                       _mk_long_requests(bm_fc, n_requests),
+                                       fc_arrivals, kv_pages=fc_pages)
+        out_u = np.asarray(fc_base.pop("outputs"))
+        out_c = np.asarray(fc_cached.pop("outputs"))
+        greedy_agreement = float((out_u == out_c).mean())
+        res["feature_cache"] = {
+            "uncached": fc_base,
+            "cached": fc_cached,
+            "goodput_gain": fc_cached["goodput"]
+            / max(fc_base["goodput"], 1e-9),
+            # quality delta: greedy disagreement of the cached run against
+            # the uncached replay of the SAME trace (0.0 = bit-identical)
+            "greedy_agreement": greedy_agreement,
+            "quality_delta": 1.0 - greedy_agreement,
+        }
     # suffix pruning + dynamic windows: long-generation trace at EQUAL pool
     # bytes — SW_POOL_PAGES allocatable pages page-gate eager full-extent
     # admission at 2 residents, while lazy windowed admission maps prompt +
     # one active window and fits 3 (1.5x), growing the deferred far suffix
     # just-in-time
-    sw_pages = SW_POOL_PAGES + 1    # + the scheduler's garbage page
-    sw_base_cfg = gen_cfg(bm, "es", gen_length=SW_GEN_LENGTH,
-                          block_length=BLOCK_LENGTH)
-    sw_win_cfg = gen_cfg(bm, "es", gen_length=SW_GEN_LENGTH,
-                         block_length=BLOCK_LENGTH,
-                         window_blocks=SW_WINDOW_BLOCKS)
-    sw_arrivals = _poisson_arrivals(n_requests, mean_ia, seed=3)
-    sw_base = _run_suffix_window(bm, sw_base_cfg,
-                                 _mk_window_requests(bm, n_requests),
-                                 sw_arrivals, kv_pages=sw_pages, lazy=False)
-    sw_win = _run_suffix_window(bm, sw_win_cfg,
-                                _mk_window_requests(bm, n_requests),
-                                sw_arrivals, kv_pages=sw_pages, lazy=True)
-    out_full = np.asarray(sw_base.pop("outputs"))
-    out_win = np.asarray(sw_win.pop("outputs"))
-    sw_bound = costmodel.suffix_window_report(
-        bm.model.cfg, sw_win_cfg, pool_pages=sw_pages - 1,
-        page_size=PAGE_SIZE, prompt_len=SW_PROMPT_LEN)
-    # the measured lazy accounting must match the analytic report exactly
-    # (plain raise, not assert: the gate must survive python -O)
-    if sw_win["pages_deferred"] != n_requests * sw_bound["pages_deferred"]:
-        raise RuntimeError(
-            f"lazy admission deferred {sw_win['pages_deferred']} pages, "
-            f"analytic says {n_requests * sw_bound['pages_deferred']}")
-    if sw_base["pages_deferred"] != 0 or sw_base["window_stalls"] != 0:
-        raise RuntimeError("eager baseline touched the lazy gauges")
-    suffix_window = {
-        "full": sw_base,
-        "windowed": sw_win,
-        "concurrency_gain": sw_win["admitted_concurrency"]
-        / max(sw_base["admitted_concurrency"], 1),
-        "goodput_gain": sw_win["goodput"] / max(sw_base["goodput"], 1e-9),
-        "greedy_agreement": float((out_full == out_win).mean()),
-        "bound": sw_bound,
-    }
+    if want("suffix_window"):
+        sw_pages = SW_POOL_PAGES + 1    # + the scheduler's garbage page
+        sw_base_cfg = gen_cfg(bm, "es", gen_length=SW_GEN_LENGTH,
+                              block_length=BLOCK_LENGTH)
+        sw_win_cfg = gen_cfg(bm, "es", gen_length=SW_GEN_LENGTH,
+                             block_length=BLOCK_LENGTH,
+                             window_blocks=SW_WINDOW_BLOCKS)
+        sw_arrivals = _poisson_arrivals(n_requests, mean_ia, seed=3)
+        sw_base = _run_suffix_window(bm, sw_base_cfg,
+                                     _mk_window_requests(bm, n_requests),
+                                     sw_arrivals, kv_pages=sw_pages,
+                                     lazy=False)
+        sw_win = _run_suffix_window(bm, sw_win_cfg,
+                                    _mk_window_requests(bm, n_requests),
+                                    sw_arrivals, kv_pages=sw_pages,
+                                    lazy=True)
+        out_full = np.asarray(sw_base.pop("outputs"))
+        out_win = np.asarray(sw_win.pop("outputs"))
+        sw_bound = costmodel.suffix_window_report(
+            bm.model.cfg, sw_win_cfg, pool_pages=sw_pages - 1,
+            page_size=PAGE_SIZE, prompt_len=SW_PROMPT_LEN)
+        # the measured lazy accounting must match the analytic report
+        # exactly (plain raise, not assert: must survive python -O)
+        if sw_win["pages_deferred"] != n_requests * sw_bound["pages_deferred"]:
+            raise RuntimeError(
+                f"lazy admission deferred {sw_win['pages_deferred']} pages, "
+                f"analytic says {n_requests * sw_bound['pages_deferred']}")
+        if sw_base["pages_deferred"] != 0 or sw_base["window_stalls"] != 0:
+            raise RuntimeError("eager baseline touched the lazy gauges")
+        res["suffix_window"] = {
+            "full": sw_base,
+            "windowed": sw_win,
+            "concurrency_gain": sw_win["admitted_concurrency"]
+            / max(sw_base["admitted_concurrency"], 1),
+            "goodput_gain": sw_win["goodput"] / max(sw_base["goodput"], 1e-9),
+            "greedy_agreement": float((out_full == out_win).mean()),
+            "bound": sw_bound,
+        }
     # priority preemption under mixed-SLO traffic: batch jobs vs a trickle
     # of interactive requests at EQUAL pool bytes (exactly two batch
     # extents) — preemption off head-of-line blocks the interactive class,
     # preemption on spills a batch resident to host and admits it now
-    mx_pages = 2 * n_vp + 1
-    mixed_off = _run_mixed_slo(bm, gcfg, preempt=False, kv_pages=mx_pages,
-                               mean_ia=mean_ia)
-    mixed_on = _run_mixed_slo(bm, gcfg, preempt=True, kv_pages=mx_pages,
-                              mean_ia=mean_ia)
-    # plain raises, not asserts: the acceptance gates must survive python -O
-    if mixed_off.pop("outputs") != mixed_on.pop("outputs"):
-        raise RuntimeError(
-            "preemption changed greedy outputs (spill/resume must be "
-            "bit-identical to an uninterrupted replay)")
-    if mixed_on["preemptions"] < 1:
-        raise RuntimeError(
-            "mixed_slo preemption run never preempted — the pool pressure "
-            "no longer forces a spill, the section measures nothing")
-    mixed_slo = {
-        "no_preemption": mixed_off,
-        "preemption": mixed_on,
-        "outputs_bit_identical": True,
-        "interactive_p95_gain": mixed_off["interactive_p95"]
-        / max(mixed_on["interactive_p95"], 1e-9),
-    }
+    if want("mixed_slo"):
+        mx_pages = 2 * n_vp + 1
+        mixed_off = _run_mixed_slo(bm, gcfg, preempt=False,
+                                   kv_pages=mx_pages, mean_ia=mean_ia)
+        mixed_on = _run_mixed_slo(bm, gcfg, preempt=True, kv_pages=mx_pages,
+                                  mean_ia=mean_ia)
+        # plain raises, not asserts: gates must survive python -O
+        if mixed_off.pop("outputs") != mixed_on.pop("outputs"):
+            raise RuntimeError(
+                "preemption changed greedy outputs (spill/resume must be "
+                "bit-identical to an uninterrupted replay)")
+        if mixed_on["preemptions"] < 1:
+            raise RuntimeError(
+                "mixed_slo preemption run never preempted — the pool "
+                "pressure no longer forces a spill, the section measures "
+                "nothing")
+        res["mixed_slo"] = {
+            "no_preemption": mixed_off,
+            "preemption": mixed_on,
+            "outputs_bit_identical": True,
+            "interactive_p95_gain": mixed_off["interactive_p95"]
+            / max(mixed_on["interactive_p95"], 1e-9),
+        }
     # duplicate-prefix burst: sharing off vs on at EQUAL pool bytes
-    dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
-    dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
-    # plain raise, not assert: the acceptance gate must survive python -O,
-    # and the pops keep raw token dumps out of the JSON either way
-    if dup_base.pop("outputs") != dup_shared.pop("outputs"):
-        raise RuntimeError(
-            "prefix sharing changed greedy outputs (must be bit-identical)")
-    n_vp_req = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
-    dup = {
-        "baseline": dup_base,
-        "shared": dup_shared,
-        "outputs_bit_identical": True,
-        "concurrency_gain": dup_shared["admitted_concurrency"]
-        / max(dup_base["admitted_concurrency"], 1),
-        "bound": costmodel.prefix_sharing_report(
-            bm.model.cfg, pool_pages=2 * n_vp_req, page_size=PAGE_SIZE,
-            req_pages=n_vp_req, shared_pages=PROMPT_LEN // PAGE_SIZE),
-    }
+    if want("dup_prefix"):
+        dup_base = _run_dup_prefix(bm, gcfg, sharing=False)
+        dup_shared = _run_dup_prefix(bm, gcfg, sharing=True)
+        # plain raise, not assert: the acceptance gate must survive
+        # python -O, and the pops keep raw token dumps out of the JSON
+        if dup_base.pop("outputs") != dup_shared.pop("outputs"):
+            raise RuntimeError(
+                "prefix sharing changed greedy outputs "
+                "(must be bit-identical)")
+        n_vp_req = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
+        res["dup_prefix"] = {
+            "baseline": dup_base,
+            "shared": dup_shared,
+            "outputs_bit_identical": True,
+            "concurrency_gain": dup_shared["admitted_concurrency"]
+            / max(dup_base["admitted_concurrency"], 1),
+            "bound": costmodel.prefix_sharing_report(
+                bm.model.cfg, pool_pages=2 * n_vp_req, page_size=PAGE_SIZE,
+                req_pages=n_vp_req, shared_pages=PROMPT_LEN // PAGE_SIZE),
+        }
     # persistent cross-request prefix cache: identical-prompt waves under
     # block-causal encoding at EQUAL pool bytes — unshared re-fill vs a
     # store seeded by a fully drained PRIOR cycle
     # single-block extent: the wave's requests each span 4 virtual pages
     # (3 prompt + 1 generation), matching the PERSIST_POOL_PAGES sizing
-    pp_cfg = gen_cfg(bm, "es", gen_length=BLOCK_LENGTH,
-                     block_length=BLOCK_LENGTH, block_causal=True)
-    pp_base = _run_prefix_persist(bm, pp_cfg, persist=False)
-    pp_warm = _run_prefix_persist(bm, pp_cfg, persist=True)
-    # plain raises, not asserts: the acceptance gates must survive python -O
-    if pp_base.pop("outputs") != pp_warm.pop("outputs"):
-        raise RuntimeError("persistent prefix store changed greedy outputs "
-                           "(must be bit-identical to the unshared run)")
-    if pp_warm["hit_rate"] < 1.0:
-        raise RuntimeError(
-            f"warm wave hit rate {pp_warm['hit_rate']:.2f} < 1.0 — an "
-            "admission missed the persistent store")
-    if pp_warm["prompt_page_allocs"] != 0 or not pp_warm["store_pages_stable"]:
-        raise RuntimeError(
-            f"warm wave re-allocated prompt pages "
-            f"(allocs {pp_warm['prompt_page_allocs']}, stable "
-            f"{pp_warm['store_pages_stable']})")
-    n_vp_pp = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
-    prefix_persist = {
-        "unshared": pp_base,
-        "warm": pp_warm,
-        "outputs_bit_identical": True,
-        "hit_rate": pp_warm["hit_rate"],
-        "warm_prompt_page_allocs": pp_warm["prompt_page_allocs"],
-        "concurrency_gain": pp_warm["admitted_concurrency"]
-        / max(pp_base["admitted_concurrency"], 1),
-        "goodput_gain": pp_warm["goodput"] / max(pp_base["goodput"], 1e-9),
-        "bound": costmodel.prefix_persist_report(
-            bm.model.cfg, pool_pages=PERSIST_POOL_PAGES, page_size=PAGE_SIZE,
-            req_pages=n_vp_pp, shared_pages=PROMPT_LEN // PAGE_SIZE),
-    }
-    return {"lockstep": lock, "stream": stream, "paged": paged,
-            "early_advance": early_advance, "feature_cache": feature_cache,
-            "suffix_window": suffix_window, "mixed_slo": mixed_slo,
-            "dup_prefix": dup, "prefix_persist": prefix_persist,
-            "kv": kv_report, "mean_interarrival_s": mean_ia}
+    if want("prefix_persist"):
+        pp_cfg = gen_cfg(bm, "es", gen_length=BLOCK_LENGTH,
+                         block_length=BLOCK_LENGTH, block_causal=True)
+        pp_base = _run_prefix_persist(bm, pp_cfg, persist=False)
+        pp_warm = _run_prefix_persist(bm, pp_cfg, persist=True)
+        # plain raises, not asserts: gates must survive python -O
+        if pp_base.pop("outputs") != pp_warm.pop("outputs"):
+            raise RuntimeError(
+                "persistent prefix store changed greedy outputs "
+                "(must be bit-identical to the unshared run)")
+        if pp_warm["hit_rate"] < 1.0:
+            raise RuntimeError(
+                f"warm wave hit rate {pp_warm['hit_rate']:.2f} < 1.0 — an "
+                "admission missed the persistent store")
+        if (pp_warm["prompt_page_allocs"] != 0
+                or not pp_warm["store_pages_stable"]):
+            raise RuntimeError(
+                f"warm wave re-allocated prompt pages "
+                f"(allocs {pp_warm['prompt_page_allocs']}, stable "
+                f"{pp_warm['store_pages_stable']})")
+        n_vp_pp = (PROMPT_LEN + BLOCK_LENGTH) // PAGE_SIZE
+        res["prefix_persist"] = {
+            "unshared": pp_base,
+            "warm": pp_warm,
+            "outputs_bit_identical": True,
+            "hit_rate": pp_warm["hit_rate"],
+            "warm_prompt_page_allocs": pp_warm["prompt_page_allocs"],
+            "concurrency_gain": pp_warm["admitted_concurrency"]
+            / max(pp_base["admitted_concurrency"], 1),
+            "goodput_gain": pp_warm["goodput"] / max(pp_base["goodput"], 1e-9),
+            "bound": costmodel.prefix_persist_report(
+                bm.model.cfg, pool_pages=PERSIST_POOL_PAGES,
+                page_size=PAGE_SIZE, req_pages=n_vp_pp,
+                shared_pages=PROMPT_LEN // PAGE_SIZE),
+        }
+    # multi-host: single shard vs 2-shard prefill/decode disaggregation at
+    # EQUAL total pool bytes on a Poisson mixed-prompt-length trace
+    if want("multi_host"):
+        res["multi_host"] = _bench_multi_host(bm, gcfg, mean_ia)
+    return res
 
 
 def _write_json(res: dict, path: str) -> None:
@@ -786,7 +1025,12 @@ def _write_json(res: dict, path: str) -> None:
                    "sw_pool_pages": SW_POOL_PAGES,
                    "mixed_batch": MIXED_BATCH,
                    "mixed_interactive": MIXED_INTERACTIVE,
-                   "persist_pool_pages": PERSIST_POOL_PAGES},
+                   "persist_pool_pages": PERSIST_POOL_PAGES,
+                   "mh_shards": MH_SHARDS,
+                   "mh_long_prompt_len": MH_LONG_PROMPT_LEN,
+                   "mh_short_prompt_len": MH_SHORT_PROMPT_LEN,
+                   "mh_long": MH_LONG,
+                   "mh_short": MH_SHORT},
         **res,
     }
     with open(path, "w") as f:
@@ -886,6 +1130,17 @@ def run(rows: list) -> None:
         f"prompt_page_allocs={pp['warm_prompt_page_allocs']} at equal pool "
         f"bytes, outputs bit-identical",
     ))
+    mh = res["multi_host"]
+    rows.append((
+        "serving/multi_host", dt * 1e6 / 4,
+        f"goodput={mh['single']['goodput']:.2f}->"
+        f"{mh['disagg']['goodput']:.2f}tok/s ({mh['goodput_gain']:.2f}x) "
+        f"decode_p95={mh['single']['decode_p95']:.2f}->"
+        f"{mh['disagg']['decode_p95']:.2f}s ({mh['decode_p95_gain']:.2f}x, "
+        f"iter bound {mh['bound']['decode_iter_gain']:.2f}x) "
+        f"routing={mh['routing']} over {mh['shards']} shards at equal pool "
+        f"bytes, per-shard outputs bit-identical",
+    ))
     _write_json(res, "BENCH_serving.json")
 
 
@@ -897,81 +1152,117 @@ def main() -> None:
     ap.add_argument("--arch", default="llada-8b")
     ap.add_argument("--json", default=None,
                     help="write the result dict to this path")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of "
+                         f"{','.join(SECTIONS)} (default: all)")
     args = ap.parse_args()
-    res = bench(args.requests, args.load, args.arch)
-    lock, stream, paged, kv = (res["lockstep"], res["stream"], res["paged"],
-                               res["kv"])
+    sections = (tuple(s.strip() for s in args.sections.split(",") if s.strip())
+                if args.sections else None)
+    res = bench(args.requests, args.load, args.arch, sections=sections)
     print(f"poisson mean interarrival: {res['mean_interarrival_s']*1e3:.0f} ms")
-    for name, r in (("lock-step", lock), ("stream", stream), ("paged", paged)):
-        print(f"{name:10s} goodput={r['goodput']:8.2f} tok/s  "
-              f"p50={r['p50']:6.2f}s  p95={r['p95']:6.2f}s  "
-              f"makespan={r['makespan']:6.2f}s  "
-              f"slots={r.get('slots', SLOTS)}")
-    print(f"stream/lock goodput: {stream['goodput']/lock['goodput']:.2f}x   "
-          f"p95 latency: {lock['p95']/stream['p95']:.2f}x better   "
-          f"engine.step traces: {stream['step_traces']}")
-    print(f"paged: {paged['slots']} slots on {paged['pages_total']} pages "
-          f"(= {SLOTS} dense slots' bytes), peak {paged['peak_pages_in_use']} "
-          f"mean {paged['mean_pages_in_use']:.1f} pages, "
-          f"KV bytes/iter {kv['kv_bytes_ratio']:.2f}x below dense")
-    ea = res["early_advance"]
-    print(f"early-advance (parallel decoding, equal pool bytes): goodput "
-          f"{ea['aligned']['goodput']:.2f} -> {ea['early']['goodput']:.2f} "
-          f"tok/s ({ea['goodput_gain']:.2f}x), p95 {ea['aligned']['p95']:.2f}"
-          f" -> {ea['early']['p95']:.2f}s ({ea['p95_gain']:.2f}x), engine "
-          f"steps {ea['aligned']['engine_steps']} -> "
-          f"{ea['early']['engine_steps']}, "
-          f"early_advances={ea['early']['early_advances']}, "
-          f"admission p50 {ea['aligned']['admission_wait_p50']*1e3:.0f} -> "
-          f"{ea['early']['admission_wait_p50']*1e3:.0f} ms, outputs "
-          f"bit-identical")
-    fc = res["feature_cache"]
-    print(f"feature-cache (long prompts, refresh every iteration, equal pool "
-          f"bytes): goodput {fc['uncached']['goodput']:.2f} -> "
-          f"{fc['cached']['goodput']:.2f} tok/s ({fc['goodput_gain']:.2f}x), "
-          f"cache hit {fc['cached']['cache_hit_fraction']:.2f}, "
-          f"tokens refreshed p50 {fc['cached']['tokens_refreshed_p50']:.0f}, "
-          f"greedy agreement {fc['greedy_agreement']:.3f} "
-          f"(quality delta {fc['quality_delta']:.3f})")
-    sw = res["suffix_window"]
-    print(f"suffix-window (long generations, equal pool bytes): admitted "
-          f"concurrency {sw['full']['admitted_concurrency']} -> "
-          f"{sw['windowed']['admitted_concurrency']} "
-          f"({sw['concurrency_gain']:.2f}x measured, "
-          f"{sw['bound']['bound_gain']:.2f}x analytic bound), goodput "
-          f"{sw['full']['goodput']:.2f} -> {sw['windowed']['goodput']:.2f} "
-          f"tok/s ({sw['goodput_gain']:.2f}x), "
-          f"{sw['windowed']['pages_deferred']} pages deferred, "
-          f"{sw['windowed']['window_stalls']} stalls (resumed, never killed), "
-          f"greedy agreement {sw['greedy_agreement']:.3f}")
-    mx = res["mixed_slo"]
-    print(f"mixed-SLO ({MIXED_BATCH} batch jobs + {MIXED_INTERACTIVE} "
-          f"interactive, equal pool bytes): interactive p95 "
-          f"{mx['no_preemption']['interactive_p95']:.2f} -> "
-          f"{mx['preemption']['interactive_p95']:.2f}s "
-          f"({mx['interactive_p95_gain']:.2f}x), "
-          f"{mx['preemption']['preemptions']} preemptions, "
-          f"{mx['preemption']['pages_spilled']} pages spilled, resume p50 "
-          f"{mx['preemption']['resume_p50']:.2f}s, outputs bit-identical")
-    dup = res["dup_prefix"]
-    print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal pool "
-          f"bytes): admitted concurrency "
-          f"{dup['baseline']['admitted_concurrency']} -> "
-          f"{dup['shared']['admitted_concurrency']} "
-          f"({dup['concurrency_gain']:.2f}x measured, "
-          f"{dup['bound']['bound_gain']:.2f}x analytic bound), "
-          f"outputs bit-identical")
-    pp = res["prefix_persist"]
-    print(f"prefix-persist ({DUP_REQUESTS} identical requests, warm "
-          f"cross-cycle store, equal pool bytes): admitted concurrency "
-          f"{pp['unshared']['admitted_concurrency']} -> "
-          f"{pp['warm']['admitted_concurrency']} "
-          f"({pp['concurrency_gain']:.2f}x measured, "
-          f"{pp['bound']['bound_gain']:.2f}x analytic bound), goodput "
-          f"{pp['unshared']['goodput']:.2f} -> {pp['warm']['goodput']:.2f} "
-          f"tok/s ({pp['goodput_gain']:.2f}x), hit rate {pp['hit_rate']:.2f}, "
-          f"{pp['warm_prompt_page_allocs']} warm prompt-page allocations, "
-          f"outputs bit-identical")
+    if "lockstep" in res:
+        lock, stream, paged, kv = (res["lockstep"], res["stream"],
+                                   res["paged"], res["kv"])
+        for name, r in (("lock-step", lock), ("stream", stream),
+                        ("paged", paged)):
+            print(f"{name:10s} goodput={r['goodput']:8.2f} tok/s  "
+                  f"p50={r['p50']:6.2f}s  p95={r['p95']:6.2f}s  "
+                  f"makespan={r['makespan']:6.2f}s  "
+                  f"slots={r.get('slots', SLOTS)}")
+        print(f"stream/lock goodput: "
+              f"{stream['goodput']/lock['goodput']:.2f}x   "
+              f"p95 latency: {lock['p95']/stream['p95']:.2f}x better   "
+              f"engine.step traces: {stream['step_traces']}")
+        print(f"paged: {paged['slots']} slots on {paged['pages_total']} "
+              f"pages (= {SLOTS} dense slots' bytes), peak "
+              f"{paged['peak_pages_in_use']} "
+              f"mean {paged['mean_pages_in_use']:.1f} pages, "
+              f"KV bytes/iter {kv['kv_bytes_ratio']:.2f}x below dense")
+    ea = res.get("early_advance")
+    if ea:
+        print(f"early-advance (parallel decoding, equal pool bytes): goodput "
+              f"{ea['aligned']['goodput']:.2f} -> "
+              f"{ea['early']['goodput']:.2f} "
+              f"tok/s ({ea['goodput_gain']:.2f}x), p95 "
+              f"{ea['aligned']['p95']:.2f}"
+              f" -> {ea['early']['p95']:.2f}s ({ea['p95_gain']:.2f}x), engine "
+              f"steps {ea['aligned']['engine_steps']} -> "
+              f"{ea['early']['engine_steps']}, "
+              f"early_advances={ea['early']['early_advances']}, "
+              f"admission p50 {ea['aligned']['admission_wait_p50']*1e3:.0f} "
+              f"-> {ea['early']['admission_wait_p50']*1e3:.0f} ms, outputs "
+              f"bit-identical")
+    fc = res.get("feature_cache")
+    if fc:
+        print(f"feature-cache (long prompts, refresh every iteration, equal "
+              f"pool bytes): goodput {fc['uncached']['goodput']:.2f} -> "
+              f"{fc['cached']['goodput']:.2f} tok/s "
+              f"({fc['goodput_gain']:.2f}x), "
+              f"cache hit {fc['cached']['cache_hit_fraction']:.2f}, "
+              f"tokens refreshed p50 "
+              f"{fc['cached']['tokens_refreshed_p50']:.0f}, "
+              f"greedy agreement {fc['greedy_agreement']:.3f} "
+              f"(quality delta {fc['quality_delta']:.3f})")
+    sw = res.get("suffix_window")
+    if sw:
+        print(f"suffix-window (long generations, equal pool bytes): admitted "
+              f"concurrency {sw['full']['admitted_concurrency']} -> "
+              f"{sw['windowed']['admitted_concurrency']} "
+              f"({sw['concurrency_gain']:.2f}x measured, "
+              f"{sw['bound']['bound_gain']:.2f}x analytic bound), goodput "
+              f"{sw['full']['goodput']:.2f} -> "
+              f"{sw['windowed']['goodput']:.2f} "
+              f"tok/s ({sw['goodput_gain']:.2f}x), "
+              f"{sw['windowed']['pages_deferred']} pages deferred, "
+              f"{sw['windowed']['window_stalls']} stalls (resumed, never "
+              f"killed), greedy agreement {sw['greedy_agreement']:.3f}")
+    mx = res.get("mixed_slo")
+    if mx:
+        print(f"mixed-SLO ({MIXED_BATCH} batch jobs + {MIXED_INTERACTIVE} "
+              f"interactive, equal pool bytes): interactive p95 "
+              f"{mx['no_preemption']['interactive_p95']:.2f} -> "
+              f"{mx['preemption']['interactive_p95']:.2f}s "
+              f"({mx['interactive_p95_gain']:.2f}x), "
+              f"{mx['preemption']['preemptions']} preemptions, "
+              f"{mx['preemption']['pages_spilled']} pages spilled, resume "
+              f"p50 {mx['preemption']['resume_p50']:.2f}s, outputs "
+              f"bit-identical")
+    dup = res.get("dup_prefix")
+    if dup:
+        print(f"dup-prefix burst ({DUP_REQUESTS} identical requests, equal "
+              f"pool bytes): admitted concurrency "
+              f"{dup['baseline']['admitted_concurrency']} -> "
+              f"{dup['shared']['admitted_concurrency']} "
+              f"({dup['concurrency_gain']:.2f}x measured, "
+              f"{dup['bound']['bound_gain']:.2f}x analytic bound), "
+              f"outputs bit-identical")
+    pp = res.get("prefix_persist")
+    if pp:
+        print(f"prefix-persist ({DUP_REQUESTS} identical requests, warm "
+              f"cross-cycle store, equal pool bytes): admitted concurrency "
+              f"{pp['unshared']['admitted_concurrency']} -> "
+              f"{pp['warm']['admitted_concurrency']} "
+              f"({pp['concurrency_gain']:.2f}x measured, "
+              f"{pp['bound']['bound_gain']:.2f}x analytic bound), goodput "
+              f"{pp['unshared']['goodput']:.2f} -> "
+              f"{pp['warm']['goodput']:.2f} "
+              f"tok/s ({pp['goodput_gain']:.2f}x), hit rate "
+              f"{pp['hit_rate']:.2f}, "
+              f"{pp['warm_prompt_page_allocs']} warm prompt-page "
+              f"allocations, outputs bit-identical")
+    mh = res.get("multi_host")
+    if mh:
+        print(f"multi-host ({mh['shards']} shards, prefill/decode disagg, "
+              f"equal total pool bytes): goodput "
+              f"{mh['single']['goodput']:.2f} -> "
+              f"{mh['disagg']['goodput']:.2f} tok/s "
+              f"({mh['goodput_gain']:.2f}x), decode p95 "
+              f"{mh['single']['decode_p95']:.2f} -> "
+              f"{mh['disagg']['decode_p95']:.2f}s "
+              f"({mh['decode_p95_gain']:.2f}x, per-iter bound "
+              f"{mh['bound']['decode_iter_gain']:.2f}x, displacement "
+              f"{mh['bound']['refresh_displacement']:.1f}), routing "
+              f"{mh['routing']}, per-shard outputs bit-identical")
     if args.json:
         _write_json(res, args.json)
 

@@ -793,6 +793,19 @@ class DiffusionEngine:
         refreshing, skip-decoding, or idle (per-row mode masks)."""
         return self._jit_step(params, state, enc_out)
 
+    def bind_state_shardings(self, state_shardings, param_shardings=None):
+        """Rebind the jitted step with explicit ``EngineState`` shardings
+        (multi-host step 2: ``sharding.specs.engine_state_pspecs`` →
+        ``shardings_of``).  Under a data mesh each shard's slot planes — and
+        through the block tables, its pages — stay local; XLA inserts no
+        cross-shard collectives for the slot-parallel step.  Output keeps
+        the input layout so the rebind composes with the scheduler's
+        host-side state surgery."""
+        self._jit_step = jax.jit(
+            self._engine_step,
+            in_shardings=(param_shardings, state_shardings, None),
+            out_shardings=state_shardings)
+
     def _merge_step_outputs(self, mask, old, new):
         """Per-row merge of one mode pass's ``(caches, conf, pred, hidden,
         kv_valid, feat, stats)`` into the carried tuple: rows in ``mask``

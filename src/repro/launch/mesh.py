@@ -19,6 +19,16 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_host_mesh(shards: int = 1):
+    """1-D data mesh with one entry per serving shard (multi-host serving).
+
+    CI simulates the multi-host topology on CPU with
+    ``--xla_force_host_platform_device_count=N`` — the same trick the
+    dry-run uses — so ``shards`` fake host devices back the mesh; on real
+    hardware each entry is one host's accelerator set."""
+    return jax.make_mesh((shards,), ("data",))
+
+
 # TPU v5e hardware constants for the roofline model (DESIGN §8)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

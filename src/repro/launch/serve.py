@@ -14,6 +14,8 @@ Two runtimes:
       --dup-prompts --requests 8
   PYTHONPATH=src python -m repro.launch.serve --paged --window-blocks 2 \
       --lazy-reserve --gen-length 64 --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --paged --shards 2 \
+      --placement disagg --decode-prompt-len 16 --requests 8
 """
 from __future__ import annotations
 
@@ -25,7 +27,8 @@ import numpy as np
 from repro import configs
 from repro.configs import GenerationConfig, default_skip_stages
 from repro.models import build_model
-from repro.runtime import BatchServer, ConfigError, Request, StreamScheduler
+from repro.runtime import (BatchServer, ConfigError, Request,
+                           ShardedStreamScheduler, StreamScheduler)
 
 
 def main() -> None:
@@ -111,6 +114,27 @@ def main() -> None:
                          "persistent cross-request prefix store (with "
                          "--paged --prefix-sharing) and invariant-position "
                          "refresh skipping (docs/ARCHITECTURE.md §4b/4c)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-parallel serving shards: each shard owns a "
+                         "private slot plane, page ledger, and admission "
+                         "queue; a global placement policy routes each "
+                         "request to exactly one shard (requires --paged; "
+                         "stream runtime only; docs/ARCHITECTURE.md §6a)")
+    ap.add_argument("--placement", default="least_loaded",
+                    choices=["least_loaded", "prefix_affinity", "disagg"],
+                    help="per-request shard placement policy: least_loaded "
+                         "(committed pages + queue depth), prefix_affinity "
+                         "(route to the shard whose persistent store owns "
+                         "the prompt; needs --prefix-sharing), or disagg "
+                         "(prefill/decode disaggregation by prompt length)")
+    ap.add_argument("--refresh-shards", type=int, default=1,
+                    help="disagg only: how many leading shards take the "
+                         "LONG-prompt (refresh) class")
+    ap.add_argument("--decode-prompt-len", type=int, default=None,
+                    help="disagg only: decode shards pad prompts to this "
+                         "shorter width (the iteration-smoothing win); "
+                         "requests with longer prompts route to the "
+                         "refresh shards")
     args = ap.parse_args()
 
     # fail fast on SLO/preemption misconfiguration, before any model build
@@ -140,6 +164,51 @@ def main() -> None:
         raise ConfigError("--preemption is incompatible with "
                           "--lazy-reserve: spill breaks the max-deficit "
                           "liveness accounting")
+    # multi-host topology misconfiguration also fails before the model
+    # build (the ShardedStreamScheduler ctor re-validates all of these)
+    if args.shards < 1:
+        raise ConfigError(f"--shards must be >= 1, got {args.shards}")
+    if args.shards > 1:
+        if args.runtime != "stream":
+            raise ConfigError("--shards > 1 needs the stream runtime: the "
+                              "lock-step batch server has no page ledger "
+                              "to shard")
+        if not args.paged:
+            raise ConfigError("--shards > 1 requires --paged: shards own "
+                              "per-shard page ledgers")
+        if args.batch % args.shards:
+            raise ConfigError(
+                f"--shards ({args.shards}) must divide the slot count "
+                f"--batch ({args.batch})")
+        if args.kv_pages is not None and args.kv_pages % args.shards:
+            raise ConfigError(
+                f"--kv-pages ({args.kv_pages}) must divide evenly across "
+                f"{args.shards} shards")
+    if args.placement == "prefix_affinity" and not args.prefix_sharing:
+        raise ConfigError("--placement prefix_affinity routes on the "
+                          "persistent prefix store: it requires "
+                          "--prefix-sharing (and --block-causal for the "
+                          "store to exist)")
+    if args.placement == "disagg":
+        if args.shards < 2:
+            raise ConfigError("--placement disagg needs --shards >= 2 "
+                              "(refresh + decode classes)")
+        if not (1 <= args.refresh_shards < args.shards):
+            raise ConfigError(
+                f"--refresh-shards ({args.refresh_shards}) must satisfy "
+                f"1 <= refresh_shards < shards ({args.shards})")
+        if (args.decode_prompt_len is not None
+                and args.decode_prompt_len > args.prompt_len):
+            raise ConfigError(
+                f"--decode-prompt-len ({args.decode_prompt_len}) must not "
+                f"exceed --prompt-len ({args.prompt_len})")
+    elif args.decode_prompt_len is not None:
+        raise ConfigError("--decode-prompt-len is a disagg knob; it does "
+                          "nothing under --placement "
+                          f"{args.placement} — refusing to drop it silently")
+    if args.placement != "least_loaded" and args.shards < 2:
+        raise ConfigError(f"--placement {args.placement} needs --shards "
+                          ">= 2 (a single shard has nothing to route)")
 
     cfg = configs.get_config(args.arch)
     if not args.full:
@@ -166,7 +235,19 @@ def main() -> None:
         def stream_cb(req, bi, blk):
             print(f"  [stream] req={req.request_id} block={bi}: {blk.tolist()}")
 
-    if args.runtime == "stream":
+    if args.runtime == "stream" and args.shards > 1:
+        server = ShardedStreamScheduler(
+            model, params, gen, shards=args.shards,
+            placement=args.placement, refresh_shards=args.refresh_shards,
+            decode_prompt_len=args.decode_prompt_len,
+            max_slots=args.batch, prompt_len=args.prompt_len,
+            stream_cb=stream_cb, paged=args.paged,
+            page_size=args.page_size, kv_pages=args.kv_pages,
+            prefix_sharing=args.prefix_sharing,
+            early_advance=args.early_advance,
+            gather_refresh=args.gather_refresh,
+            lazy_reserve=args.lazy_reserve, preemption=args.preemption)
+    elif args.runtime == "stream":
         server = StreamScheduler(model, params, gen, max_slots=args.batch,
                                  prompt_len=args.prompt_len, stream_cb=stream_cb,
                                  paged=args.paged, page_size=args.page_size,
@@ -214,7 +295,9 @@ def main() -> None:
                      f"  concurrency_peak={server.stats.resident_peak}")
             if args.prefix_sharing:
                 line += f"  cow_forks={server.stats.cow_forks}"
-            if server.persistent_prefix:
+            persistent = (any(l.persistent_prefix for l in server.lanes)
+                          if args.shards > 1 else server.persistent_prefix)
+            if persistent:
                 line += (f"  prefix_hits={server.stats.prefix_hits}"
                          f"  prefix_evictions={server.stats.prefix_evictions}")
             if gen.sparse_attention:
@@ -231,6 +314,16 @@ def main() -> None:
         if server.stats.poisoned_requests:
             line += f"  poisoned_requests={server.stats.poisoned_requests}"
     print(line)
+    if args.runtime == "stream" and args.shards > 1:
+        # per-shard gauge breakdown: placement + residency + pool usage of
+        # each shard-local ledger (the multi-host monitoring surface)
+        for g in server.shard_gauges():
+            print(f"  shard {g['shard']}: placed={g['placed']}  "
+                  f"resident={g['resident']}  queued={g['queued']}  "
+                  f"completed={g['completed']}  "
+                  f"pages={g['pages_in_use']}/{g['pages_total']}  "
+                  f"peak={g['peak_pages_in_use']}  "
+                  f"blocks_grown={g['blocks_grown']}")
     ok = [r for r in done if r.output is not None]
     if ok:
         print("sample output:", ok[0].output[:24].tolist())

@@ -7,6 +7,10 @@ from repro.runtime.errors import (  # noqa: F401
     SchedulerError,
 )
 from repro.runtime.request import Request, StreamCallback, pad_and_stack  # noqa: F401
+from repro.runtime.multihost import (  # noqa: F401
+    ShardedPageAllocator,
+    ShardedStreamScheduler,
+)
 from repro.runtime.scheduler import (  # noqa: F401
     PageAllocator,
     SchedulerStats,

@@ -122,6 +122,10 @@ class SchedulerStats:
                                          # could not map its next pages this
                                          # step paused (never killed) until
                                          # growth is granted
+    blocks_grown: int = 0                # extent blocks granted past the
+                                         # admission-time request (on-demand
+                                         # gen_length growth up to max_blocks,
+                                         # lazy_reserve mode only)
     admission_waits: list = dataclasses.field(default_factory=list)
                                          # per-request queue wait (arrival -> admit)
     # adaptive feature cache (0 / empty with the cache disabled).  A FULL
@@ -197,6 +201,7 @@ class SchedulerStats:
             "early_advances": self.early_advances,
             "pages_deferred": self.pages_deferred,
             "window_stalls": self.window_stalls,
+            "blocks_grown": self.blocks_grown,
             "admission_wait_p50": self.admission_wait_p50,
             "cache_hit_fraction": self.cache_hit_fraction,
             "tokens_refreshed_p50": self.tokens_refreshed_p50,
@@ -533,7 +538,24 @@ class StreamScheduler:
             engine_kw.update(paged=True, page_size=page_size, kv_pages=kv_pages)
             self.allocator = PageAllocator(
                 kv_pages, persistent=self.persistent_prefix)
-        self.engine = DiffusionEngine(model, gen, **engine_kw)
+        shared_engine = engine_kw.pop("engine", None)
+        if shared_engine is not None:
+            # multi-host lanes hand every scheduler the SAME engine so
+            # homogeneous shards share one compiled step program; everything
+            # that changes the traced program must agree, typed and upfront
+            if (shared_engine.gen is not gen
+                    or shared_engine.paged != paged
+                    or (paged and shared_engine.page_size != page_size)
+                    or (paged and shared_engine.kv_pages != kv_pages)
+                    or shared_engine.early_advance
+                    != engine_kw["early_advance"]):
+                raise ConfigError(
+                    "shared engine mismatch: a scheduler can only reuse an "
+                    "engine built with the same gen config and identical "
+                    "paged/page_size/kv_pages/early_advance settings")
+            self.engine = shared_engine
+        else:
+            self.engine = DiffusionEngine(model, gen, **engine_kw)
         self.n_blocks = gen.gen_length // gen.block_length
         self.state = self.engine.init_engine_state(
             max_slots, prompt_len, jax.random.PRNGKey(seed))
@@ -551,6 +573,11 @@ class StreamScheduler:
         self.slot_extent: list[tuple[int, int]] = [(0, 0)] * max_slots
         self.slot_frontier: list[int] = [0] * max_slots
         self.slot_order: list[int] = [0] * max_slots
+        # on-demand extent growth (ROADMAP item 5): True freezes a row's
+        # extent for life — set at admission for rows without max_blocks
+        # headroom, and STICKY on a denied growth decision (a later grant
+        # would remap the row's read set mid-block and break replay)
+        self.slot_no_grow: list[bool] = [True] * max_slots
         self._admit_seq = 0
         # slots paused by a denied window growth: inactive on device but NOT
         # retired — _finish_cycle skips them, _grow_windows resumes them
@@ -752,6 +779,33 @@ class StreamScheduler:
                     continue
             n_blocks = self._req_blocks(req)
             p = np.asarray(req.prompt, np.int32)[-self.prompt_len:]
+            no_grow = req.max_blocks is None
+            if self.lazy_reserve and req.max_blocks is not None:
+                # On-demand extent growth (ROADMAP item 5): the initial
+                # active window already attends 1 + window_blocks blocks,
+                # so the existence of every block inside that horizon must
+                # be decided HERE, once — mapping them later would change
+                # this row's read set mid-block and break bit-identical
+                # replay.  Blocks past the horizon are decided one at a
+                # time at their block entry by _grow_windows.  The grow
+                # predicate mirrors the lazy admission gate (whole enlarged
+                # need coverable now, on top of every resident deficit);
+                # a denial admits the soft-hint extent and freezes it.
+                cap = min(max(req.max_blocks, 1), self.n_blocks)
+                horizon = 1 + self.gen.window_blocks
+                if n_blocks < min(horizon, cap):
+                    want_nb = min(horizon, cap)
+                    resident_deficit = max(
+                        (self.slot_extent[s][1] - self.slot_frontier[s]
+                         for s, r in enumerate(self.slot_req)
+                         if r is not None), default=0)
+                    avail = (self.allocator.free_pages
+                             + self.allocator.reclaimable_pages)
+                    w_need = self._pages_needed(len(p), want_nb)[2]
+                    if avail - w_need >= resident_deficit:
+                        n_blocks = want_nb
+                    else:
+                        no_grow = True
             pages: list[int] = []
             shared_map: list[tuple[int, int]] = []   # [(vp, physical page)]
             reserve: list[int] = []
@@ -921,6 +975,7 @@ class StreamScheduler:
                 self.stats.peak_pages_in_use = max(
                     self.stats.peak_pages_in_use, self.stats.pages_in_use)
             self.slot_blocks[slot] = n_blocks
+            self.slot_no_grow[slot] = no_grow
             if self.expects_enc:
                 enc = self.model.encode(
                     self.params, jax.numpy.asarray(req.enc_embeds)[None],
@@ -1214,8 +1269,29 @@ class StreamScheduler:
 
         Growth target per row: the pages covering its current attention
         horizon (``bs + block_length * (1 + window_blocks)``), capped at the
-        row's admission-time extent — rows nearing their last block ask for
-        nothing, so they can never stall near the finish line.
+        row's extent — rows nearing their last block ask for nothing, so
+        they can never stall near the finish line.
+
+        **On-demand extent growth (ROADMAP item 5):** a row whose request
+        set ``max_blocks`` above its admitted block budget may RAISE the
+        extent itself, one block at a time.  The decision point is a block
+        ENTRY: right after the advance into what is currently the row's
+        final block, its window horizon first exceeds the extent
+        (``want > extent_last``) and the very next step would attend the
+        candidate block's region — so the raise (or its denial) lands
+        between the advance step and that first read, and the row's read
+        set matches the offline run of whichever final length wins.  A
+        raise is granted only when the whole enlarged remaining need
+        (``new_last - frontier``) is coverable right now while still
+        covering every strictly-older row's deficit — growth never
+        increases any deficit the liveness induction relies on.  A denial
+        is STICKY (``slot_no_grow``): granting later, mid-block, would
+        remap pages the row already attended as masked and break replay —
+        the row simply finishes at its current extent (no new stall path).
+        The decision for blocks inside the ADMISSION horizon is made by
+        ``_admit`` under the same predicate.  The device ``blocks_left``
+        bump lands at the entry of the old final block — one whole block
+        before the advance it postpones.
 
         **No-deadlock policy (max-deficit reserve, ARCHITECTURE §1c):**
         residents are ranked by admission order; row r is granted g pages iff
@@ -1233,6 +1309,7 @@ class StreamScheduler:
         if not residents:
             return
         bs = np.asarray(self.state.bs)
+        bl = np.asarray(self.state.blocks_left)
         lb = self.gen.block_length
         wb = self.gen.window_blocks
         ps = self.page_size
@@ -1242,11 +1319,36 @@ class StreamScheduler:
         bt = None
         resumed: list[int] = []
         stalled_now: list[int] = []
+        grown: list[int] = []
         for i, slot in enumerate(order):
             frontier = self.slot_frontier[slot]
-            extent_last = self.slot_extent[slot][1]
+            first_vp, extent_last = self.slot_extent[slot]
             limit = int(bs[slot]) + lb * (1 + wb)
-            target = min(-(-limit // ps), extent_last)
+            want = -(-limit // ps)
+            req = self.slot_req[slot]
+            if (want > extent_last and not self.slot_no_grow[slot]
+                    and int(bl[slot]) > 0
+                    and req is not None and req.max_blocks is not None
+                    and self.slot_blocks[slot]
+                    < min(max(req.max_blocks, 1), self.n_blocks)):
+                nb = self.slot_blocks[slot] + 1
+                new_last = -(-(self.prompt_len + nb * lb) // ps)
+                older = max((deficit[s] for s in order[:i]), default=0)
+                if (self.allocator.free_pages
+                        + self.allocator.reclaimable_pages) \
+                        - (new_last - frontier) >= older:
+                    self.stats.pages_deferred += new_last - extent_last
+                    self.stats.blocks_grown += 1
+                    self.slot_extent[slot] = (first_vp, new_last)
+                    self.slot_blocks[slot] = nb
+                    deficit[slot] = new_last - frontier
+                    extent_last = new_last
+                    grown.append(slot)
+                else:
+                    # sticky: a later, mid-block grant would change pages
+                    # this row already attended as masked
+                    self.slot_no_grow[slot] = True
+            target = min(want, extent_last)
             g = target - frontier
             if g <= 0:
                 continue
@@ -1270,6 +1372,10 @@ class StreamScheduler:
         st = self.state
         if bt is not None:
             st = st._replace(block_tables=jnp.asarray(bt))
+        for slot in grown:
+            # one more block of budget on device — granted while the row is
+            # still >= one whole block away from its final advance
+            st = st._replace(blocks_left=st.blocks_left.at[slot].add(1))
         for slot in resumed:
             # the engine's phase counter kept ticking while the row was
             # frozen; the stall hit right after a block advance, where the

@@ -53,9 +53,23 @@ def _div(dim: int, mesh: Mesh, axis) -> bool:
 
 
 def _guard(spec: tuple, shape: tuple, mesh: Mesh) -> P:
-    """Drop any axis assignment that does not divide its dim."""
+    """Drop any axis assignment that does not divide its dim.
+
+    Axis names the mesh does not even have are dropped first: a missing
+    axis has size 1, i.e. replicated — this is what lets the same rules
+    serve both the 2-D train/serve meshes and the 1-D ``("data",)``
+    multi-host serving mesh (where every 'model' assignment must vanish
+    rather than error inside ``NamedSharding``)."""
     out = []
     for dim, axis in zip(shape, spec):
+        if axis is not None:
+            names = tuple(n for n in
+                          (axis if isinstance(axis, tuple) else (axis,))
+                          if n in mesh.axis_names)
+            if isinstance(axis, tuple):
+                axis = names if names else None
+            else:
+                axis = names[0] if names else None
         out.append(axis if (axis is not None and _div(dim, mesh, axis)) else None)
     return P(*out)
 
@@ -236,6 +250,19 @@ def engine_state_pspecs(state: Any, mesh: Mesh, *, paged: bool = False) -> Any:
         sample_seeds=slot_vec(state.sample_seeds),
         block_tables=None if state.block_tables is None
         else batch_spec(state.block_tables.shape, mesh),
+        # adaptive feature cache planes (PR 6): the probe-feature buffer
+        # shards like hidden ([B, T, d] — slots on dp, d on TP), the
+        # full-sequence confidence plane like tokens, and the cumulative
+        # refresh counters like every other per-slot vector
+        feat=None if state.feat is None
+        else _guard((dp, None, "model"), state.feat.shape, mesh),
+        conf_full=None if state.conf_full is None
+        else batch_spec(state.conf_full.shape, mesh),
+        cache_refreshed=None if state.cache_refreshed is None
+        else slot_vec(state.cache_refreshed),
+        cache_eligible=None if state.cache_eligible is None
+        else slot_vec(state.cache_eligible),
+        # poison-detector plane (PR 9): per-slot sticky flag
         poisoned=None if state.poisoned is None
         else slot_vec(state.poisoned),
     )

@@ -122,6 +122,46 @@ def test_engine_state_spec_rules(mesh):
     assert kv_spec[:3] == (None, None, None) and "model" not in kv_spec[:3]
 
 
+def test_engine_state_spec_parity(mesh):
+    """Every populated ``EngineState`` plane must have a sharding rule.
+
+    ``engine_state_pspecs`` builds its result field-by-field, so a newly
+    added state plane silently falls back to the dataclass default (None)
+    unless a rule is written for it — and a None spec under
+    jit-with-shardings means "replicate", which is wrong for per-slot
+    planes and breaks the multi-host step.  This test fails the moment a
+    new plane appears without a matching spec entry.  The engine is built
+    with the adaptive feature cache enabled so the optional planes
+    (``feat``/``conf_full``) are populated too."""
+    import dataclasses as dc
+
+    from repro import configs
+    from repro.configs import GenerationConfig, SkipStage
+    from repro.core.engine import DiffusionEngine
+    from repro.models import build_model
+    from repro.sharding.specs import engine_state_pspecs
+
+    cfg = dc.replace(configs.reduced(configs.get_config("llada-8b")), n_layers=2)
+    model = build_model(cfg)
+    gen = GenerationConfig(mode="es", skip_stages=(SkipStage(1, 0.5),),
+                           gen_length=8, block_length=8,
+                           prompt_refresh_period=8, block_refresh_period=4,
+                           cache_prompt_interval=2)  # populate feat/conf_full
+    eng = DiffusionEngine(model, gen, paged=True, page_size=8)
+    state = jax.eval_shape(
+        lambda: eng.init_engine_state(16, 8, jax.random.PRNGKey(0)))
+    specs = engine_state_pspecs(state, mesh, paged=True)
+    for field in type(state)._fields:
+        value = getattr(state, field)
+        if value is None:
+            continue
+        spec = getattr(specs, field)
+        assert spec is not None, (
+            f"EngineState.{field} is populated but engine_state_pspecs "
+            f"returned no sharding rule for it — add one in "
+            f"src/repro/sharding/specs.py")
+
+
 def test_engine_step_lowers_with_engine_state_shardings():
     """End-to-end HLO lowering: the mixed-mode engine.step accepts a fully
     sharded EngineState on a real (1x1) mesh — the multi-host serving

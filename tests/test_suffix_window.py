@@ -258,6 +258,60 @@ def test_max_blocks_hard_cap(small_model):
     assert sched.stats.pages_in_use == 0
 
 
+def test_on_demand_extent_growth(small_model):
+    """On-demand gen_length growth (ROADMAP item 5): a request admitted
+    with a 1-block soft hint but ``max_blocks=3`` grows block-by-block at
+    each final-block entry up to the hard cap, and the grown output is
+    bit-identical to an offline run generating exactly 3 blocks — growth
+    lands only at block entry, so the window never re-maps pages it
+    already attended as masked."""
+    cfg, model, params = small_model
+    g = _cfg(window_blocks=1)
+    reqs = _requests(cfg, 1)
+    reqs[0].max_new_tokens = 8          # soft hint: 1 block
+    reqs[0].max_blocks = 3              # hard cap: may grow to 3
+    outs, sched = _serve(model, params, g, reqs, lazy_reserve=True)
+    assert outs[0].shape[0] == 3 * GEN["block_length"]
+    assert sched.stats.blocks_grown >= 1, \
+        "the extent should have grown past the admitted horizon"
+    assert sched.stats.pages_in_use == 0, "pages leaked at retirement"
+    assert sched.allocator.free_pages == sched.allocator.num_pages - 1
+    ref = _offline_ref(model, params, _cfg(window_blocks=1, gen_length=24),
+                       reqs)
+    np.testing.assert_array_equal(
+        outs[0], ref[0, PROMPT_LEN:],
+        err_msg="grown output diverged from the offline 3-block replay")
+
+
+def test_growth_denied_is_sticky_under_pressure(small_model):
+    """When the pool cannot back a growth grant at final-block entry the
+    denial is STICKY: both rows finish at their admitted 2-block extent
+    (16 tokens), never grow, and never stall waiting for pages they
+    already refused — a later mid-block grant would re-map pages the
+    window had attended as masked and break replay."""
+    cfg, model, params = small_model
+    g = _cfg(window_blocks=1)
+    reqs = _requests(cfg, 2)
+    for r in reqs:
+        r.max_new_tokens = 16           # 2 blocks: fills the 1+wb horizon
+        r.max_blocks = 4                # would grow, pool permitting
+    # each 2-block extent maps ceil((16+16)/8)=4 pages up-front; an
+    # 8-page pool holds both with ZERO slack, so the first final-block
+    # entry's growth ask (1 page) is denied for both rows
+    outs, sched = _serve(model, params, g, reqs, lazy_reserve=True,
+                         kv_pages=9)
+    for o in outs:
+        assert o.shape[0] == 2 * GEN["block_length"]
+    assert sched.stats.blocks_grown == 0
+    assert sched.stats.window_stalls == 0, \
+        "a sticky denial must not leave rows stalling for growth"
+    assert sched.stats.pages_in_use == 0
+    ref = _offline_ref(model, params, _cfg(window_blocks=1, gen_length=16),
+                       reqs)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(outs[i], ref[i, PROMPT_LEN:])
+
+
 def test_lazy_reserve_gating(small_model):
     """lazy_reserve requires paged + a finite window.  The historical third
     exclusion — prefix_sharing — is LIFTED: deficit accounting is

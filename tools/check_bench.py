@@ -59,6 +59,18 @@ on share one model, trace, and pool):
   * two structural invariants: ``outputs_bit_identical`` is true (spill /
     resume replays bit-exactly) and ``preemption.preemptions >= 1`` (the
     run actually exercised the spill path)
+and the multi-host disaggregation section (self-normalized: the single
+shard and the 2-shard split share one model, trace, and total pool bytes):
+  * ``multi_host.goodput_gain`` and ``multi_host.decode_p95_gain`` —
+    guarded against the baseline with the same --tol AND held at
+    ``MULTI_HOST_GOODPUT_FLOOR`` / ``MULTI_HOST_DECODE_P95_FLOOR``
+  * two structural invariants: ``outputs_bit_identical`` is true (each
+    shard's outputs match a single-shard replay of its own trace) and
+    ``routing`` equals the cost model's expected placement split
+
+``--only SECTION`` restricts everything above to one section prefix — the
+CI multi-host job benches only that section, so the other sections are
+legitimately absent from its JSON.
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -88,6 +100,8 @@ GUARDED_GAINS = (
     "prefix_persist.goodput_gain",
     "prefix_persist.concurrency_gain",
     "mixed_slo.interactive_p95_gain",
+    "multi_host.goodput_gain",
+    "multi_host.decode_p95_gain",
 )
 
 # minimum greedy agreement of the cached run vs the uncached replay —
@@ -106,6 +120,12 @@ PREFIX_HIT_RATE_FLOOR = 1.0
 # the mixed-SLO headline: spilling a batch resident must never make the
 # interactive class SLOWER than head-of-line blocking at equal pool bytes
 MIXED_SLO_GAIN_FLOOR = 1.0
+
+# the multi-host headlines: 2-shard prefill/decode disaggregation at equal
+# total pool bytes must deliver at least 1.5x goodput on the mixed trace,
+# and splitting the classes must never make decode p95 WORSE
+MULTI_HOST_GOODPUT_FLOOR = 1.5
+MULTI_HOST_DECODE_P95_FLOOR = 1.0
 
 
 def _get(d: dict, path: str):
@@ -126,9 +146,16 @@ def _speedup(d: dict, path: str):
     return n / ref
 
 
-def check(new: dict, base: dict, tol: float) -> list[str]:
+def check(new: dict, base: dict, tol: float, only: str | None = None
+          ) -> list[str]:
+    """``only`` restricts the guard to one section (its dotted-path prefix):
+    the CI multi-host job benches just that section, so every other
+    section is absent from the new JSON and must not be reported missing."""
+    want = lambda s: only is None or only == s
     errors = []
     for path in GUARDED:
+        if not want(path.split(".")[0]):
+            continue
         n, b = _speedup(new, path), _speedup(base, path)
         if b is None:
             continue            # metric did not exist in the baseline yet
@@ -143,6 +170,8 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"more than {tol:.0%} below the baseline {b:.2f}x "
                 f"(floor {floor:.2f}x)")
     for path in GUARDED_GAINS:
+        if not want(path.split(".")[0]):
+            continue
         n, b = _get(new, path), _get(base, path)
         if b is None:
             continue
@@ -155,7 +184,7 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
             errors.append(
                 f"{path}: same-run gain {n:.2f}x regressed more than "
                 f"{tol:.0%} below the baseline {b:.2f}x (floor {floor:.2f}x)")
-    fc = new.get("feature_cache")
+    fc = new.get("feature_cache") if want("feature_cache") else None
     if fc is not None:
         agr = fc.get("greedy_agreement")
         if agr is None or agr < AGREEMENT_FLOOR:
@@ -164,7 +193,7 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"{'missing' if agr is None else f'{agr:.3f}'} is below the "
                 f"quality floor {AGREEMENT_FLOOR:.2f} "
                 f"(quality_delta {fc.get('quality_delta')})")
-    sw = new.get("suffix_window")
+    sw = new.get("suffix_window") if want("suffix_window") else None
     if sw is not None:
         agr = sw.get("greedy_agreement")
         if agr is None or agr < AGREEMENT_FLOOR:
@@ -179,7 +208,7 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"{'missing' if cg is None else f'{cg:.2f}x'} is below the "
                 f"floor {CONCURRENCY_GAIN_FLOOR:.2f}x (lazy windowed "
                 f"admission must beat eager reservation at equal pool bytes)")
-    pp = new.get("prefix_persist")
+    pp = new.get("prefix_persist") if want("prefix_persist") else None
     if pp is not None:
         if not pp.get("outputs_bit_identical"):
             errors.append("prefix_persist.outputs_bit_identical is not true")
@@ -196,7 +225,7 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"prefix_persist.warm_prompt_page_allocs "
                 f"{'missing' if allocs is None else allocs} != 0 — a warm "
                 f"wave re-allocated resident prompt pages")
-    mx = new.get("mixed_slo")
+    mx = new.get("mixed_slo") if want("mixed_slo") else None
     if mx is not None:
         if not mx.get("outputs_bit_identical"):
             errors.append("mixed_slo.outputs_bit_identical is not true "
@@ -213,7 +242,7 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
                 f"{'missing' if gain is None else f'{gain:.2f}x'} is below "
                 f"the floor {MIXED_SLO_GAIN_FLOOR:.2f}x (preemption must "
                 f"not hurt interactive latency at equal pool bytes)")
-    ea = new.get("early_advance")
+    ea = new.get("early_advance") if want("early_advance") else None
     if ea is not None:
         if not ea.get("outputs_bit_identical"):
             errors.append("early_advance.outputs_bit_identical is not true")
@@ -226,6 +255,34 @@ def check(new: dict, base: dict, tol: float) -> list[str]:
             errors.append(
                 f"early advance must strictly beat block-aligned p95: "
                 f"{ea['early']['p95']:.2f} >= {ea['aligned']['p95']:.2f}")
+    mh = new.get("multi_host") if want("multi_host") else None
+    if mh is not None:
+        if not mh.get("outputs_bit_identical"):
+            errors.append(
+                "multi_host.outputs_bit_identical is not true (per-shard "
+                "outputs must match a single-shard replay of the same "
+                "per-shard trace)")
+        gg = mh.get("goodput_gain")
+        if gg is None or gg < MULTI_HOST_GOODPUT_FLOOR:
+            errors.append(
+                f"multi_host.goodput_gain "
+                f"{'missing' if gg is None else f'{gg:.2f}x'} is below the "
+                f"floor {MULTI_HOST_GOODPUT_FLOOR:.2f}x (disaggregation must "
+                f"beat the single shard at equal total pool bytes)")
+        dg = mh.get("decode_p95_gain")
+        if dg is None or dg < MULTI_HOST_DECODE_P95_FLOOR:
+            errors.append(
+                f"multi_host.decode_p95_gain "
+                f"{'missing' if dg is None else f'{dg:.2f}x'} is below the "
+                f"floor {MULTI_HOST_DECODE_P95_FLOOR:.2f}x (long prefill "
+                f"must not inflate the decode class after the split)")
+        routing = mh.get("routing") or {}
+        placement = _get(mh, "bound.placement") or {}
+        if routing != placement:
+            errors.append(
+                f"multi_host.routing {routing} != analytic placement "
+                f"{placement} — the disagg policy diverged from the cost "
+                f"model's expected split")
     return errors
 
 
@@ -235,12 +292,16 @@ def main() -> int:
     ap.add_argument("baseline_json", help="committed baseline to compare to")
     ap.add_argument("--tol", type=float, default=0.10,
                     help="allowed relative goodput regression (default 0.10)")
+    ap.add_argument("--only", default=None, metavar="SECTION",
+                    help="restrict the guard to one section prefix (e.g. "
+                         "multi_host) — other sections' absence from the "
+                         "new JSON is then not an error")
     args = ap.parse_args()
     with open(args.new_json) as f:
         new = json.load(f)
     with open(args.baseline_json) as f:
         base = json.load(f)
-    errors = check(new, base, args.tol)
+    errors = check(new, base, args.tol, only=args.only)
     for path in GUARDED:
         n, b = _speedup(new, path), _speedup(base, path)
         if n is not None and b is not None:
@@ -275,6 +336,13 @@ def main() -> int:
               f"{mx['interactive_p95_gain']:.2f}x "
               f"(floor {MIXED_SLO_GAIN_FLOOR:.2f}x), "
               f"preemptions={_get(mx, 'preemption.preemptions')}")
+    mh = new.get("multi_host")
+    if mh is not None and mh.get("goodput_gain") is not None:
+        print(f"  multi_host.goodput_gain: {mh['goodput_gain']:.2f}x "
+              f"(floor {MULTI_HOST_GOODPUT_FLOOR:.2f}x), decode_p95_gain: "
+              f"{mh.get('decode_p95_gain', 0):.2f}x (floor "
+              f"{MULTI_HOST_DECODE_P95_FLOOR:.2f}x), routing "
+              f"{mh.get('routing')}")
     if errors:
         print("serving-bench regression guard FAILED:", file=sys.stderr)
         for e in errors:

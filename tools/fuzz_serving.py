@@ -5,8 +5,12 @@ Each *trace* is a fully seed-determined serving scenario: random prompt
 lengths, duplicate-prompt ratio, staggered arrival steps, and a random
 feature-flag assignment (paged pool, prefix sharing, block-causal +
 persistent prefix cache, lazy window reservation, early advance, adaptive
-feature cache, sampling temperature).  The trace is driven step by step
-through ``StreamScheduler`` and must satisfy, at EVERY step:
+feature cache, sampling temperature, and a multi-host ``shards`` split
+with a drawn placement policy).  The trace is driven step by step through
+``StreamScheduler`` (or ``ShardedStreamScheduler`` when the trace draws 2
+shards — the invariants below then hold PER SHARD-LOCAL LEDGER, plus the
+cross-shard conservation law that the sharded view equals the sum of its
+lanes) and must satisfy, at EVERY step:
 
   * allocator refcounts are never negative, and free/used partition the
     pool exactly (``used + free == num_pages - 1``);
@@ -116,6 +120,17 @@ def trace_flags(seed: int, *, chaos: bool = False) -> dict:
         # adversarial pool pressure: preemption only fires when a higher
         # class actually starves, so pin the pool tight
         flags["tight_pool"] = True
+    # multi-host draws LAST (same append-only discipline as the fault
+    # draws): a 2-shard split needs a paged pool and an even slot count;
+    # prefix_affinity placement routes on the persistent store, so it is
+    # only drawn when the trace already shares prefixes
+    shard_ok = flags["paged"] and flags["max_slots"] % 2 == 0
+    flags["shards"] = 2 if (shard_ok and rng.random() < 0.5) else 1
+    flags["placement"] = (
+        "prefix_affinity" if (flags["shards"] == 2 and flags["prefix_sharing"]
+                              and flags["block_causal"]
+                              and rng.random() < 0.5)
+        else "least_loaded")
     return flags
 
 
@@ -263,6 +278,7 @@ def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
     flags = dict(flags or trace_flags(seed))
     gen = _gen_config(flags)
     reqs, arrivals = _requests(flags, model.cfg.vocab_size, seed)
+    shards = flags.get("shards", 1)
     skw = dict(max_slots=flags["max_slots"], prompt_len=PROMPT_LEN,
                early_advance=flags["early_advance"])
     if flags["paged"]:
@@ -271,11 +287,20 @@ def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
                    lazy_reserve=flags["lazy_reserve"],
                    preemption=flags.get("preemption", False))
         if flags["tight_pool"]:
-            # just enough for ~1.5 requests: exercises page-gating, FIFO
-            # waits, persistent-store LRU eviction, and (with preemption)
-            # forced spills under adversarial pressure
-            skw["kv_pages"] = N_VP + N_VP // 2 + 1
-    sched = StreamScheduler(model, params, gen, **skw)
+            # just enough for ~1.5 requests PER SHARD: exercises
+            # page-gating, FIFO waits, persistent-store LRU eviction, and
+            # (with preemption) forced spills under adversarial pressure
+            skw["kv_pages"] = shards * (N_VP + N_VP // 2 + 1)
+    if shards > 1:
+        from repro.runtime import ShardedStreamScheduler
+
+        sched = ShardedStreamScheduler(
+            model, params, gen, shards=shards,
+            placement=flags.get("placement", "least_loaded"), **skw)
+        lanes = sched.lanes
+    else:
+        sched = StreamScheduler(model, params, gen, **skw)
+        lanes = [sched]
     pending = list(zip(arrivals, reqs))
     steps = 0
     injected = not flags.get("inject_nan", False)
@@ -284,9 +309,15 @@ def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
             sched.submit(pending.pop(0)[1])
         sched.step()
         if not injected and steps >= flags["nan_step"]:
-            # seeded NaN burst: retries until an eligible victim is resident
-            injected = inject_nan(sched)
-        check_allocator_invariants(sched)
+            # seeded NaN burst: retries until an eligible victim is
+            # resident on some shard (the first lane with one takes it)
+            injected = any(inject_nan(lane) for lane in lanes)
+        for lane in lanes:
+            check_allocator_invariants(lane)
+        if shards > 1 and sched.allocator is not None:
+            # cross-shard conservation law: the sharded ledger view must
+            # agree with the sum of its shard-local ledgers (LedgerError)
+            sched.allocator.check_conservation()
         steps += 1
         assert steps < 5000, "trace did not terminate"
     # failure-handling trichotomy: every request ends in exactly one typed
@@ -306,11 +337,13 @@ def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
     assert sched.stats.deadline_rejects == len(rejected)
     assert sched.stats.poisoned_requests == len(poisoned)
     # end-of-trace residency: only the persistent store may keep pages
-    if sched.allocator is not None:
-        store = sum(len(m) for _, m in sched.allocator._prefix.values()) \
-            if sched.allocator.persistent else 0
-        assert sched.allocator.used_pages == store, \
-            "pages leaked past retirement"
+    # (shard-local — a lane can never hold another shard's claim)
+    for lane in lanes:
+        if lane.allocator is not None:
+            store = sum(len(m) for _, m in lane.allocator._prefix.values()) \
+                if lane.allocator.persistent else 0
+            assert lane.allocator.used_pages == store, \
+                "pages leaked past retirement"
     # offline differential replay, same layout — over the CLEAN finishers
     # only: a completed request must be bit-identical to its uninterrupted
     # offline run even if it was preempted/resumed mid-trace or shared the
@@ -318,21 +351,30 @@ def run_trace(model, params, seed: int, *, flags: dict | None = None) -> dict:
     if done_ok:
         ekw = dict(paged=True, page_size=PAGE_SIZE) if flags["paged"] else {}
         eng = DiffusionEngine(model, gen, **ekw)
-        # paged serving attention-masks the left pad (prompt_start); dense
-        # serving attends it as pad tokens (scheduler admission sets 0) — the
-        # replay must mirror whichever layout the trace ran
-        ps = [PROMPT_LEN - len(r.prompt) for r in done_ok] if flags["paged"] \
-            else [0] * len(done_ok)
-        ref = np.asarray(eng.generate(
-            params, jnp.asarray(pad_and_stack(done_ok, 0, PROMPT_LEN)),
-            jax.random.PRNGKey(0),
-            prompt_start=jnp.asarray(ps, jnp.int32),
-            sample_seeds=jnp.asarray([r.sample_seed for r in done_ok])))
-        for i, r in enumerate(done_ok):
-            np.testing.assert_array_equal(
-                r.output, ref[i, PROMPT_LEN:],
-                err_msg=f"seed {seed}: request {r.request_id} diverged from "
-                        f"offline replay (flags {flags})")
+        # PER-SHARD replay: lane s samples under scheduler seed s, so each
+        # shard's completions must replay bit-equal against PRNGKey(s) —
+        # the single-shard trace is the degenerate one-group case (key 0)
+        groups: dict[int, list] = {}
+        for r in done_ok:
+            s = sched.placements[r.request_id] if shards > 1 else 0
+            groups.setdefault(s, []).append(r)
+        for s, grp in sorted(groups.items()):
+            # paged serving attention-masks the left pad (prompt_start);
+            # dense serving attends it as pad tokens (scheduler admission
+            # sets 0) — the replay mirrors whichever layout the trace ran
+            ps = [PROMPT_LEN - len(r.prompt) for r in grp] \
+                if flags["paged"] else [0] * len(grp)
+            ref = np.asarray(eng.generate(
+                params, jnp.asarray(pad_and_stack(grp, 0, PROMPT_LEN)),
+                jax.random.PRNGKey(s),
+                prompt_start=jnp.asarray(ps, jnp.int32),
+                sample_seeds=jnp.asarray([r.sample_seed for r in grp])))
+            for i, r in enumerate(grp):
+                np.testing.assert_array_equal(
+                    r.output, ref[i, PROMPT_LEN:],
+                    err_msg=f"seed {seed}: request {r.request_id} (shard "
+                            f"{s}) diverged from offline replay "
+                            f"(flags {flags})")
     return dict(seed=seed, steps=steps, flags=flags,
                 prefix_hits=sched.stats.prefix_hits,
                 prefix_evictions=sched.stats.prefix_evictions,
